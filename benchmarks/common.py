@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables on CPU
+plus TPU-v5e cost MODELS derived from compiled HLO (this container has no
+TPU; kernel-level tables report measured CPU latency ratios AND the
+bytes-moved model that predicts the TPU ratio — see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.roofline.analysis import HBM_BW, ICI_BW
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    """Median wall-clock microseconds per call (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def hbm_model_us(nbytes: float) -> float:
+    """Ideal TPU-v5e time for an HBM-bound op moving `nbytes`."""
+    return nbytes / HBM_BW * 1e6
+
+
+def ici_model_us(nbytes: float) -> float:
+    return nbytes / ICI_BW * 1e6
+
+
+def bytes_of(compiled) -> float:
+    return float(compiled.cost_analysis().get("bytes accessed", 0.0))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

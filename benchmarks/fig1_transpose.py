@@ -1,0 +1,45 @@
+"""Fig. 1 reproduction: Direct Transpose vs naive dequant->transpose->requant.
+
+Reports, per tensor shape:
+  - measured CPU wall time of both XLA-path implementations (ratio),
+  - the HBM bytes-moved model (the quantity that determines the TPU ratio:
+    naive round-trips the tensor through bf16/f32 twice; direct moves fp8
+    bytes once) — the paper measures 2-3x on H-series GPUs; the byte model
+    predicts ~3x on v5e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bytes_of, emit, hbm_model_us, time_fn
+from repro.core.quant import quantize_rowwise
+from repro.core.transpose import transpose_direct, transpose_naive
+
+SHAPES = [(4096, 2048), (4096, 5120), (8192, 4096), (8192, 7168)]
+
+
+def run():
+    for (m, k) in SHAPES:
+        r = np.random.default_rng(0)
+        x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+        q = quantize_rowwise(x)
+
+        f_direct = jax.jit(transpose_direct)
+        f_naive = jax.jit(lambda q: transpose_naive(q, "po2"))
+        us_d = time_fn(f_direct, q)
+        us_n = time_fn(f_naive, q)
+
+        b_d = bytes_of(f_direct.lower(q).compile())
+        b_n = bytes_of(f_naive.lower(q).compile())
+        emit(f"fig1_transpose_direct_{m}x{k}", us_d,
+             f"model_us={hbm_model_us(b_d):.1f}")
+        emit(f"fig1_transpose_naive_{m}x{k}", us_n,
+             f"model_us={hbm_model_us(b_n):.1f};"
+             f"cpu_speedup={us_n / us_d:.2f}x;"
+             f"tpu_model_speedup={b_n / b_d:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

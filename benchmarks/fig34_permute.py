@@ -1,0 +1,85 @@
+"""Fig. 3/4 reproduction: fused permute+padding vs separate kernels.
+
+Separate = one gather pass (permute) + one pad/copy pass; fused = a single
+pass writing the padded layout directly.  We compare compiled HLO bytes
+(the TPU predictor) and CPU wall time of both jitted variants, forward
+(permute+pad) and backward (unpermute+unpad = scatter into token order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bytes_of, emit, hbm_model_us, time_fn
+
+CASES = [(8192, 2048, 10240), (24576, 2048, 28672), (32768, 7168, 36864)]
+
+
+def run():
+    for (t, d, n_out) in CASES:
+        r = np.random.default_rng(0)
+        x = jnp.asarray(r.normal(size=(t, d)).astype(np.float32)
+                        ).astype(jnp.float8_e4m3fn)
+        row_map = np.full(n_out, -1, np.int32)
+        perm = r.permutation(t)
+        row_map[:t] = perm
+        row_map = jnp.asarray(row_map)
+
+        def fused(x, row_map):
+            valid = (row_map >= 0)[:, None]
+            rows = jnp.take(x, jnp.maximum(row_map, 0), axis=0)
+            return jnp.where(valid, rows, jnp.zeros((), x.dtype))
+
+        def separate(x, row_map):
+            # permute pass materializes the reordered tensor, THEN a second
+            # pass writes it into the padded buffer (two HBM round trips)
+            permuted = jnp.take(x, jnp.maximum(row_map[:t], 0), axis=0)
+            permuted = permuted * jnp.ones((), x.dtype)   # force materialize
+            out = jnp.zeros((n_out, d), x.dtype)
+            return jax.lax.dynamic_update_slice(out, permuted, (0, 0))
+
+        ff = jax.jit(fused)
+        fs = jax.jit(separate)
+        us_f = time_fn(ff, x, row_map)
+        us_s = time_fn(fs, x, row_map)
+        b_f = bytes_of(ff.lower(x, row_map).compile())
+        b_s = bytes_of(fs.lower(x, row_map).compile())
+        emit(f"fig3_permute_pad_fused_{t}x{d}", us_f,
+             f"model_us={hbm_model_us(b_f):.1f}")
+        emit(f"fig3_permute_pad_separate_{t}x{d}", us_s,
+             f"model_us={hbm_model_us(b_s):.1f};"
+             f"cpu_speedup={us_s / us_f:.2f}x;"
+             f"tpu_model_speedup={b_s / b_f:.2f}x")
+
+        # backward: unpermute+unpad (scatter-add into token order)
+        y = jnp.asarray(r.normal(size=(n_out, d)).astype(np.float32)
+                        ).astype(jnp.bfloat16)
+
+        def fused_b(y, row_map):
+            seg = jnp.where(row_map >= 0, row_map, t)
+            return jax.ops.segment_sum(y.astype(jnp.float32), seg,
+                                       num_segments=t + 1)[:t]
+
+        def separate_b(y, row_map):
+            trimmed = y[:t] * jnp.ones((), y.dtype)      # unpad pass
+            seg = jnp.where(row_map[:t] >= 0, row_map[:t], t)
+            return jax.ops.segment_sum(trimmed.astype(jnp.float32), seg,
+                                       num_segments=t + 1)[:t]
+
+        fb = jax.jit(fused_b)
+        sb = jax.jit(separate_b)
+        us_fb = time_fn(fb, y, row_map)
+        us_sb = time_fn(sb, y, row_map)
+        b_fb = bytes_of(fb.lower(y, row_map).compile())
+        b_sb = bytes_of(sb.lower(y, row_map).compile())
+        emit(f"fig4_unpermute_fused_{t}x{d}", us_fb,
+             f"model_us={hbm_model_us(b_fb):.1f}")
+        emit(f"fig4_unpermute_separate_{t}x{d}", us_sb,
+             f"model_us={hbm_model_us(b_sb):.1f};"
+             f"cpu_speedup={us_sb / us_fb:.2f}x;"
+             f"tpu_model_speedup={b_sb / b_fb:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

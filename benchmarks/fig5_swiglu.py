@@ -1,0 +1,64 @@
+"""Fig. 5 reproduction: fused SwiGLU+quantization vs standalone SwiGLU
+followed by a separate quantize kernel.
+
+The paper's claim: the fused kernel matches the latency of the standalone
+SwiGLU (i.e., quantization becomes free).  On v5e the predictor is HBM
+bytes: standalone+quant re-reads/re-writes the activation; fused writes the
+e4m3 payload directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bytes_of, emit, hbm_model_us, time_fn
+from repro.core.linear import _swiglu
+from repro.core.quant import quantize_rowwise
+
+CASES = [(8192, 2816), (16384, 4096), (32768, 3072)]
+
+
+def run():
+    for (m, two_f) in CASES:
+        r = np.random.default_rng(0)
+        h = jnp.asarray(r.normal(size=(m, two_f)).astype(np.float32)
+                        ).astype(jnp.bfloat16)
+
+        def swiglu_only(h):
+            return _swiglu(h)
+
+        def unfused(h):
+            a = _swiglu(h) * jnp.ones((), jnp.bfloat16)  # materialized
+            q = quantize_rowwise(a, tag="bench")
+            return q.data, q.scale
+
+        def fused(h):
+            # single pass: act + quant in one fusion (what the Pallas kernel
+            # does on TPU; XLA fuses the chain into one loop on CPU too)
+            q = quantize_rowwise(_swiglu(h), tag="bench")
+            return q.data, q.scale
+
+        f0 = jax.jit(swiglu_only)
+        f1 = jax.jit(unfused)
+        f2 = jax.jit(fused)
+        us0 = time_fn(f0, h)
+        us1 = time_fn(f1, h)
+        us2 = time_fn(f2, h)
+        b0 = bytes_of(f0.lower(h).compile())
+        b1 = bytes_of(f1.lower(h).compile())
+        b2 = bytes_of(f2.lower(h).compile())
+        emit(f"fig5_swiglu_only_{m}x{two_f}", us0,
+             f"model_us={hbm_model_us(b0):.1f}")
+        emit(f"fig5_swiglu_quant_fused_{m}x{two_f}", us2,
+             f"model_us={hbm_model_us(b2):.1f};"
+             f"vs_swiglu_only={us2 / us0:.2f}x;"
+             f"tpu_model_vs_only={b2 / b0:.2f}x")
+        emit(f"fig5_swiglu_quant_unfused_{m}x{two_f}", us1,
+             f"model_us={hbm_model_us(b1):.1f};"
+             f"fused_speedup={us1 / us2:.2f}x;"
+             f"tpu_model_speedup={b1 / b2:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

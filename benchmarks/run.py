@@ -1,0 +1,45 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see each module's docstring
+for what 'derived' contains).  Set REPRO_BENCH_FAST=1 to skip the two
+compile-heavy entries (table 2/3 probes and the convergence run)."""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    from benchmarks import (double_quant_error, fig1_transpose,
+                            fig34_permute, fig5_swiglu, table1_comm)
+    modules = [
+        ("eq1_double_quant", double_quant_error),
+        ("fig1_transpose", fig1_transpose),
+        ("fig34_permute", fig34_permute),
+        ("fig5_swiglu", fig5_swiglu),
+        ("table1_comm", table1_comm),
+    ]
+    if not fast:
+        from benchmarks import fig6_convergence, table23_throughput
+        modules += [
+            ("fig6_convergence", fig6_convergence),
+            ("table23_throughput", table23_throughput),
+        ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},nan,ERROR")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

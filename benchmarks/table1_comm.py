@@ -1,0 +1,43 @@
+"""Table 1 reproduction: dispatch all-to-all with and without Q/DQ at the
+communication boundary, for the paper's (M, N, EP) grid.
+
+Modeled on v5e ICI/HBM constants (no wall-clock fabric on this container):
+  BF16 comm      = 2 * M*N bytes over ICI
+  FP8 comm       = (M*N payload + M*N/128*4 scale) bytes (the paper's
+                   'doubled buffers' effect: scales ride a second buffer)
+  Q/DQ           = HBM-bound casts: read 2B + write 1B (Q); 1B + 2B (DQ)
+Speedups reported for COMM alone and ALL (comm + Q/DQ) — reproducing the
+paper's finding that one Q/DQ pair costs ~1/3 of the FP8 comm win at small
+scales, and that FP8-Flow-MoE removes exactly that term.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, hbm_model_us, ici_model_us
+
+GRID = [
+    (24576, 2048, 8), (24576, 5120, 8), (32768, 7168, 8),
+    (24576, 2048, 16), (24576, 5120, 16), (32768, 7168, 16),
+    (24576, 2048, 32), (24576, 5120, 32), (32768, 7168, 32),
+]
+
+
+def run():
+    for (m, n, ep) in GRID:
+        elems = m * n
+        # per-chip payloads cross (ep-1)/ep of the fabric; constant factor
+        # cancels in the ratio — we report raw wire bytes.
+        bf16_us = ici_model_us(2 * elems)
+        fp8_wire = elems + (elems // 128) * 4
+        fp8_comm_us = ici_model_us(fp8_wire)
+        q_us = hbm_model_us(elems * (2 + 1))
+        dq_us = hbm_model_us(elems * (1 + 2))
+        all_us = fp8_comm_us + q_us + dq_us
+        emit(f"table1_comm_{m}x{n}_ep{ep}", fp8_comm_us,
+             f"bf16_us={bf16_us:.0f};qdq_us={q_us + dq_us:.0f};"
+             f"speedup_comm={bf16_us / fp8_comm_us:.2f}x;"
+             f"speedup_all={bf16_us / all_us:.2f}x;"
+             f"flow_removes_qdq=+{(bf16_us / fp8_comm_us - bf16_us / all_us):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

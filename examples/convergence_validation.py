@@ -1,0 +1,10 @@
+"""Fig. 6 reproduction driver: BF16 vs FP8-Flow-MoE vs naive-FP8 loss curves
+on identical data (DeepSeek-V2-Lite family, reduced scale).
+
+Run:  PYTHONPATH=src:. REPRO_CONV_STEPS=120 python examples/convergence_validation.py
+Writes experiments/convergence.csv + prints final-loss gaps.
+"""
+from benchmarks import fig6_convergence
+
+if __name__ == "__main__":
+    fig6_convergence.run()

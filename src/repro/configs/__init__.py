@@ -1,0 +1,15 @@
+"""Architecture registry: one config per assigned arch + the paper's own."""
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, applicable_shapes
+
+ARCH_IDS = [
+    "starcoder2_15b", "qwen15_05b", "gemma3_4b", "gemma2_9b",
+    "seamless_m4t_v2", "mamba2_27b", "hymba_15b", "qwen3_moe_235b",
+    "grok1_314b", "llava_next_34b", "deepseek_v2_lite", "deepseek_v3_671b",
+]
+
+
+def get_arch(name: str) -> ArchConfig:
+    import importlib
+    name = name.replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG

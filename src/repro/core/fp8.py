@@ -1,0 +1,63 @@
+"""FP8 format definitions and power-of-two scale arithmetic.
+
+The paper (FP8-Flow-MoE §3.1) constrains all quantization scales to powers of
+two so that re-scaling between row-wise and column-wise quantization layouts is
+exact exponent arithmetic on the FP8 encoding.  This module centralizes the
+format constants and the po2-scale helpers shared by the pure-JAX reference
+path and the Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Formats.  E4M3 (fn variant: no inf, max 448) is used for all payload data;
+# E5M2 is provided for gradients if a recipe asks for wider range; scales are
+# UE8M0-style — an f32 that is always an exact power of two (we keep them as
+# f32 for XLA-friendliness; the exponent-only property is what matters).
+# ---------------------------------------------------------------------------
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+E4M3_MAX = 448.0          # largest finite e4m3fn magnitude
+E5M2_MAX = 57344.0
+E4M3_EXP_BIAS = 7         # value = (-1)^s * 2^(E-7) * (1 + M/8)   (normal)
+E4M3_MANTISSA_BITS = 3
+E4M3_MIN_NORMAL_EXP = -6  # E=1 -> 2^-6; E=0 is subnormal: 2^-6 * (M/8)
+
+TILE = 128                # per-tile quantization granularity (paper Eq. 2)
+BLOCK = 128               # transpose / weight block (128x128)
+
+FMT_MAX = {E4M3: E4M3_MAX, E5M2: E5M2_MAX}
+# normalize dtype instances (np.dtype('float8_e4m3fn')) to the same table
+FMT_MAX.update({jnp.dtype(k): v for k, v in list(FMT_MAX.items())})
+
+
+def po2_scale(amax: jnp.ndarray, fmt_max: float = E4M3_MAX) -> jnp.ndarray:
+    """Smallest power-of-two scale s with amax / s <= fmt_max.
+
+    Paper Eq. (2) computes s = amax/448; we round the exponent *up* to the
+    next power of two (UE8M0) so the quantized magnitude never exceeds the
+    format max.  amax == 0 maps to s = 1 (any scale works for the zero tile).
+    """
+    amax = jnp.asarray(amax, jnp.float32)
+    safe = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
+    exp = jnp.ceil(jnp.log2(safe / fmt_max))
+    # clamp so 2**exp stays finite in f32 and representable as a scale
+    exp = jnp.clip(exp, -126.0, 126.0)
+    s = jnp.exp2(exp)
+    return jnp.where(amax > 0, s, jnp.float32(1.0))
+
+
+def is_po2(s: jnp.ndarray) -> jnp.ndarray:
+    """True where s is an exact power of two (and positive)."""
+    s = jnp.asarray(s, jnp.float32)
+    m, _ = jnp.frexp(s)  # s = m * 2**e with m in [0.5, 1)
+    return (s > 0) & (m == 0.5)
+
+
+def cast_to(x: jnp.ndarray, fmt=E4M3) -> jnp.ndarray:
+    """Saturating cast to fp8 (round-to-nearest-even via XLA convert)."""
+    fmax = FMT_MAX[fmt]
+    x = jnp.clip(x.astype(jnp.float32), -fmax, fmax)
+    return x.astype(fmt)

@@ -1,0 +1,417 @@
+"""The MoE block: router -> FP8 dispatch (all-to-all) -> fused permute+pad ->
+grouped expert FFN -> combine.  DeepEP-style dataflow mapped onto
+shard_map + jax.lax collectives (DESIGN.md §2, §4).
+
+Token layout inside the shard_map body (one device's shard):
+  x_loc : (T, D) bf16 tokens (T = local token count)
+  EP    : size of the expert-parallel mesh axis ('model')
+  E_loc : experts resident on this device (E_total / EP)
+
+Dispatch uses fixed per-destination capacity C_send (static shapes for XLA),
+dropping overflow assignments (standard capacity-factor routing; the drop
+fraction is returned as a metric).  The send buffer is built by the fused
+permute+pad operator directly in FP8 (fp8 recipes) so the all-to-all carries
+1-byte payloads + po2 scales (the paper's 'doubled buffers' caveat — both are
+counted by the collective roofline term).
+
+Gradient flow (fp8_flow): the dispatch path is FP8 in BOTH directions — the
+input-gradient cotangent is a QTensor whose payload rides the backward
+all-to-all in e4m3 (paper Fig. 2d), produced by the Dgrad1 fused-quantizing
+epilogue in linear.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import casts
+from repro.core.fp8 import TILE
+from repro.core.linear import dequantize_exit, expert_ffn, quantize_entry
+from repro.core.quant import QTensor, _dequantize_nocount, quantize_rowwise
+from repro.core.recipes import Recipe
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden (F); w13 is (K, 2F)
+    capacity_factor: float = 1.25
+    ep_axis: str = "model"         # mesh axis carrying experts
+    dp_axes: tuple = ("data",)     # token-sharded axes over which expert
+                                   # weights are replicated (Wgrad psum set)
+    act: str = "swiglu"
+    router_dtype: str = "float32"
+    # experts-per-device < 1 is impossible; if n_experts < EP the layer falls
+    # back to TP-sharded experts (grok-1 case) — handled in models/lm.py by
+    # calling moe_block_tp instead.
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Routing (BF16/FP32 — routers are numerically sensitive; all recipes agree).
+# ---------------------------------------------------------------------------
+def router_topk(x, w_router, top_k: int):
+    """Returns (probs (T,k) f32, ids (T,k) i32, aux_loss scalar)."""
+    logits = jnp.dot(x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs_full = jax.nn.softmax(logits, axis=-1)            # (T, E)
+    p, ids = jax.lax.top_k(probs_full, top_k)               # (T, k)
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss + router z-loss
+    E = w_router.shape[-1]
+    me = jnp.mean(probs_full, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return p, ids, lb_loss + 1e-3 * z_loss
+
+
+# ---------------------------------------------------------------------------
+# Static routing plan: slot maps for send / expert-grouping / combine.
+# All pure integer ops (argsort + cumsum); differentiation never touches them.
+# ---------------------------------------------------------------------------
+def _dispatch_plan(ids, top_k: int, EP: int, E_loc: int, C_send: int):
+    """ids: (T, k) global expert ids.  Returns
+    row_map_send : (EP*C_send,) source token row per send slot (-1 pad)
+    slot_expert  : (EP*C_send,) LOCAL expert id on the dest rank (-1 pad)
+    slot_assign  : (EP*C_send,) flat assignment index (for prob lookup; -1)
+    drop_frac    : scalar f32
+    """
+    T = ids.shape[0]
+    A = T * top_k
+    flat_ids = ids.reshape(A)                      # global expert per assignment
+    dest = flat_ids // E_loc                       # dest EP rank
+    # stable sort by dest keeps token order within each destination
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = dest[order]
+    # position within destination group
+    pos_all = jnp.arange(A) - jnp.searchsorted(sorted_dest, sorted_dest)
+    keep = pos_all < C_send
+    slot = sorted_dest * C_send + pos_all          # target send slot
+    slot = jnp.where(keep, slot, EP * C_send)      # overflow -> scratch slot
+    n_slots = EP * C_send
+    init = jnp.full((n_slots + 1,), -1, jnp.int32)
+    row_map_send = init.at[slot].set((order // top_k).astype(jnp.int32))[:-1]
+    slot_expert = init.at[slot].set((flat_ids[order] % E_loc).astype(jnp.int32))[:-1]
+    slot_assign = init.at[slot].set(order.astype(jnp.int32))[:-1]
+    drop_frac = 1.0 - jnp.sum(keep.astype(jnp.float32)) / A
+    return row_map_send, slot_expert, slot_assign, drop_frac
+
+
+def _expert_plan(recv_expert, E_loc: int, C_exp: int):
+    """recv_expert: (R,) local expert id per received row (-1 invalid).
+    Returns row_map_exp (E_loc*C_exp,) source recv-row per expert slot (-1
+    pad) and ret_map (R,) expert slot per recv row (-1 dropped)."""
+    R = recv_expert.shape[0]
+    e = jnp.where(recv_expert >= 0, recv_expert, E_loc)  # invalid -> bucket E
+    order = jnp.argsort(e, stable=True)
+    sorted_e = e[order]
+    pos = jnp.arange(R) - jnp.searchsorted(sorted_e, sorted_e)
+    keep = (pos < C_exp) & (sorted_e < E_loc)
+    slot = jnp.where(keep, sorted_e * C_exp + pos, E_loc * C_exp)
+    init = jnp.full((E_loc * C_exp + 1,), -1, jnp.int32)
+    row_map_exp = init.at[slot].set(order.astype(jnp.int32))[:-1]
+    ret_init = jnp.full((R + 1,), -1, jnp.int32)
+    ret_map = ret_init.at[jnp.where(keep, order, R)].set(
+        jnp.where(keep, slot, -1).astype(jnp.int32))[:-1]
+    return row_map_exp, ret_map
+
+
+# ---------------------------------------------------------------------------
+# QTensor-aware permute with explicit VJP (casting-free routing of FP8
+# cotangents through injective maps).
+# ---------------------------------------------------------------------------
+def _take_rows(x, row_map, fill=0.0):
+    valid = (row_map >= 0)[:, None]
+    rows = jnp.take(x, jnp.maximum(row_map, 0), axis=0)
+    return jnp.where(valid, rows, jnp.asarray(fill, x.dtype))
+
+
+def _permute_pad_fields(data, scale, row_map, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.fused_permute_pad import fused_permute_pad_pallas
+        return fused_permute_pad_pallas(data, scale, row_map, row_map.shape[0])
+    return _take_rows(data, row_map), _take_rows(scale, row_map, fill=1.0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def permute_q(recipe: Recipe, q: QTensor, row_map, inv_map) -> QTensor:
+    """Gather QTensor rows by row_map (fused permute+pad).  row_map must be
+    injective on valid slots; backward gathers by inv_map — FP8 cotangents
+    route without any dequantization."""
+    d, s = _permute_pad_fields(q.data, q.scale, row_map, recipe.use_pallas)
+    return QTensor(d, s, q.tile)
+
+
+def _pq_fwd(recipe, q, row_map, inv_map):
+    return permute_q(recipe, q, row_map, inv_map), (inv_map,)
+
+
+def _pq_bwd(recipe, res, qg: QTensor):
+    (inv_map,) = res
+    d, s = _permute_pad_fields(qg.data, qg.scale, inv_map, recipe.use_pallas)
+    return QTensor(d, s, qg.tile), None, None
+
+
+permute_q.defvjp(_pq_fwd, _pq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch boundaries (entry quantize fused with the send permute).
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0, 3))
+def dispatch_quantize(recipe: Recipe, x, row_map, T: int) -> QTensor:
+    """fp8_flow entry: ONE explicit quantize (the paper's entry-point cast),
+    then the fused permute+pad into the padded send layout.
+    Backward: FP8 gradient rows arrive from the backward all-to-all; they are
+    dequantized inside the consuming scatter-add (fused) and summed per
+    source token (the top-k reduction, kept in BF16 by design)."""
+    q = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
+    d, s = _permute_pad_fields(q.data, q.scale, row_map, recipe.use_pallas)
+    return QTensor(d, s, q.tile)
+
+
+def _dq_fwd(recipe, x, row_map, T):
+    return dispatch_quantize(recipe, x, row_map, T), (row_map,
+                                                      jnp.zeros((0,), x.dtype))
+
+
+def _dq_bwd(recipe, T, res, qg: QTensor):
+    row_map, wit = res
+    casts.record("fused_dequantize", "dispatch_bwd", qg.data.size)
+    g_rows = _dequantize_nocount(qg, jnp.bfloat16)
+    seg = jnp.where(row_map >= 0, row_map, T)
+    gx = jax.ops.segment_sum(g_rows.astype(jnp.float32), seg,
+                             num_segments=T + 1)[:T]
+    return gx.astype(wit.dtype), None
+
+
+dispatch_quantize.defvjp(_dq_fwd, _dq_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
+def fp8_dispatch_naive(recipe: Recipe, x, row_map, T: int, ep_axis: str):
+    """naive_fp8 (Fig 2c): Q -> permute -> all-to-all(FP8) -> DQ, with a BF16
+    backward all-to-all (DeepSeek keeps combine & all backward comm in BF16).
+    Two explicit casts — exactly the Q/DQ-around-comm pair of Table 1."""
+    y, _ = _fdn_fwd(recipe, x, row_map, T, ep_axis)
+    return y
+
+
+def _a2a(t, axis_name):
+    EP = jax.lax.axis_size(axis_name)
+    shp = t.shape
+    t = t.reshape(EP, shp[0] // EP, *shp[1:])
+    t = jax.lax.all_to_all(t, axis_name, split_axis=0, concat_axis=0,
+                           tiled=False)
+    # tiled=False with split size 1: (EP, 1, C, ...) -> squeeze
+    return t.reshape(shp)
+
+
+def _fdn_fwd(recipe, x, row_map, T, ep_axis):
+    q = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
+    d, s = _permute_pad_fields(q.data, q.scale, row_map, recipe.use_pallas)
+    d = _a2a(d, ep_axis)
+    s = _a2a(s, ep_axis)
+    x_recv = dequantize_exit(recipe, QTensor(d, s, q.tile))
+    return x_recv, (row_map, jnp.zeros((0,), x.dtype))
+
+
+def _fdn_bwd(recipe, T, ep_axis, res, g):
+    row_map, wit = res
+    g = _a2a(g.astype(jnp.bfloat16), ep_axis)                # BF16 backward comm
+    seg = jnp.where(row_map >= 0, row_map, T)
+    gx = jax.ops.segment_sum(g.astype(jnp.float32), seg, num_segments=T + 1)[:T]
+    return gx.astype(wit.dtype), None
+
+
+fp8_dispatch_naive.defvjp(_fdn_fwd, _fdn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# The full MoE block (runs inside shard_map; ep_axis must be a mesh axis).
+# ---------------------------------------------------------------------------
+def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
+    """x: (T, D) local tokens.  w13: (E_loc, D, 2F); w2: (E_loc, F, D);
+    w_router: (D, E_total) replicated.  Returns (y (T, D), metrics dict)."""
+    T, D = x.shape
+    EP = jax.lax.axis_size(cfg.ep_axis)
+    E_loc = cfg.n_experts // EP
+    assert E_loc * EP == cfg.n_experts, (cfg.n_experts, EP)
+    k = cfg.top_k
+    C_send = _round_up(max(int(T * k / EP * cfg.capacity_factor), 8), 8)
+    R = EP * C_send
+    # fp8 recipes need 128-row alignment per expert group (transpose blocks
+    # and MXU tiles); bf16 only needs sublane alignment.
+    C_exp = _round_up(max(R // E_loc, 8), 128 if recipe.is_fp8 else 8)
+
+    p, ids, aux = router_topk(x, w_router, k)
+    row_map_send, slot_expert, slot_assign, drop_frac = _dispatch_plan(
+        ids, k, EP, E_loc, C_send)
+
+    # ---- dispatch ----------------------------------------------------------
+    if recipe.name == "fp8_flow":
+        q_send = dispatch_quantize(recipe, x, row_map_send, T)
+        d = _a2a(q_send.data, cfg.ep_axis)
+        s = _a2a(q_send.scale, cfg.ep_axis)
+        q_recv = QTensor(d, s, q_send.tile)
+        recv_in = q_recv
+    elif recipe.name == "naive_fp8":
+        recv_in = fp8_dispatch_naive(recipe, x, row_map_send, T, cfg.ep_axis)
+    else:  # bf16 / blockwise: BF16 dispatch
+        x_send = _take_rows(x.astype(jnp.bfloat16), row_map_send)
+        recv_in = _a2a(x_send, cfg.ep_axis)
+
+    # metadata rides int32/f32 all-to-alls (ids are sent alongside payloads;
+    # DeepEP packs them into the same message — we count their bytes too)
+    recv_expert = _a2a(slot_expert, cfg.ep_axis)
+    p_flat = jnp.where(slot_assign >= 0,
+                       p.reshape(-1)[jnp.maximum(slot_assign, 0)], 0.0)
+    recv_p = _a2a(p_flat, cfg.ep_axis)
+
+    # ---- expert grouping (fused permute+pad #2) ----------------------------
+    row_map_exp, ret_map = _expert_plan(recv_expert, E_loc, C_exp)
+    if recipe.name == "fp8_flow":
+        q_exp = permute_q(recipe, recv_in, row_map_exp, ret_map)
+        ffn_in = QTensor(q_exp.data.reshape(E_loc, C_exp, D),
+                         q_exp.scale.reshape(E_loc, C_exp, D // TILE),
+                         (1, 1, TILE))
+    else:
+        x_exp = _take_rows(recv_in, row_map_exp)
+        ffn_in = x_exp.reshape(E_loc, C_exp, D)
+
+    # ---- grouped expert FFN (the recipe heart) -----------------------------
+    y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2)
+
+    # expert-side prob weighting (grad wrt p flows through this product)
+    p_exp = _take_rows(recv_p[:, None], row_map_exp).reshape(E_loc, C_exp)
+    y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
+
+    # ---- return + combine (BF16 by design: top-k reduction) ----------------
+    y_ret = _take_rows(y_exp.reshape(E_loc * C_exp, D), ret_map)
+    y_back = _a2a(y_ret, cfg.ep_axis)                        # (R, D) bf16
+    seg = jnp.where(row_map_send >= 0, row_map_send, T)
+    y = jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
+                            num_segments=T + 1)[:T]
+    metrics = {"aux_loss": aux, "drop_frac": drop_frac}
+    return y.astype(x.dtype), metrics
+
+
+def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
+                 tp_axis: str = "model", combine_mode: str = "local_first"):
+    """TP-sharded experts (n_experts < EP, e.g. grok-1's 8 experts on a
+    16-wide model axis): every rank holds ALL experts with d_ff sharded.
+    No dispatch all-to-all; tokens are grouped locally, each rank computes
+    its F-slice, and the second GEMM's partial sums reduce over tp_axis.
+    The FP8 pathway (quantize-once, direct-transpose Wgrad, fused ops) is
+    unchanged — only the communication pattern differs (psum vs all-to-all).
+
+    combine_mode (the §Perf hillclimb lever for the collective term):
+      'psum_first'   paper-naive ordering: all-reduce the FULL (E, C_exp, D)
+                     expert outputs, then combine locally.
+      'local_first'  combine (segment-sum) the capacity-padded rows down to
+                     (T, D) FIRST, then all-reduce only token rows —
+                     E*C_exp/T = top_k*cf x fewer bytes on the wire.
+      'reduce_scatter' local_first + psum_scatter: the output leaves seq-
+                     sharded over tp_axis (Megatron-SP style), another tp x
+                     fewer bytes; the caller re-gathers lazily (the residual
+                     stream is SP-sharded anyway).
+    """
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C_exp = _round_up(max(int(T * k / E * cfg.capacity_factor), 8),
+                      128 if recipe.is_fp8 else 8)
+
+    p, ids, aux = router_topk(x, w_router, k)
+    # local grouping: assignments -> (E, C_exp) slots
+    row_map, slot_expert, slot_assign, drop_frac = _dispatch_plan(
+        ids, k, 1, E, E * C_exp)
+    # _dispatch_plan with EP=1 gives one big group ordered by expert
+    row_map_exp, ret_map = _expert_plan(slot_expert, E, C_exp)
+    # compose maps: expert slot -> send slot -> token row
+    tok_of_slot = jnp.where(row_map_exp >= 0,
+                            row_map[jnp.maximum(row_map_exp, 0)], -1)
+
+    if recipe.name == "fp8_flow":
+        q_exp = dispatch_quantize(recipe, x, tok_of_slot, T)
+        ffn_in = QTensor(q_exp.data.reshape(E, C_exp, D),
+                         q_exp.scale.reshape(E, C_exp, D // TILE), (1, 1, TILE))
+    else:
+        ffn_in = _take_rows(x.astype(jnp.bfloat16), tok_of_slot)
+        ffn_in = ffn_in.reshape(E, C_exp, D)
+
+    y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (tp_axis,),
+                       ffn_in, w13, w2)                      # F-sliced partial
+    if combine_mode == "psum_first":
+        y_exp = jax.lax.psum(y_exp, tp_axis)                 # TP reduction
+
+    p_of_slot = jnp.where(slot_assign >= 0,
+                          p.reshape(-1)[jnp.maximum(slot_assign, 0)], 0.0)
+    p_exp = _take_rows(p_of_slot[:, None], row_map_exp).reshape(E, C_exp)
+    y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
+
+    seg = jnp.where(tok_of_slot >= 0, tok_of_slot, T)
+    y = jax.ops.segment_sum(
+        y_exp.reshape(E * C_exp, D).astype(jnp.float32), seg,
+        num_segments=T + 1)[:T]
+    if combine_mode == "local_first":
+        y = jax.lax.psum(y.astype(jnp.bfloat16), tp_axis)
+    elif combine_mode == "reduce_scatter":
+        y = jax.lax.psum_scatter(y.astype(jnp.bfloat16), tp_axis,
+                                 scatter_dimension=0, tiled=True)
+    return y.astype(x.dtype), {"aux_loss": aux, "drop_frac": drop_frac}
+
+
+def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
+    """Decode-time EP MoE: the token batch is small (<= a few hundred) and
+    REPLICATED across the ep_axis; each rank computes only its resident
+    experts' tokens and the combine is a psum over ep_axis (vLLM-style EP
+    serving — no all-to-all for tiny batches).  Forward-only (serving)."""
+    T, D = x.shape
+    EP = jax.lax.axis_size(cfg.ep_axis)
+    E_loc = cfg.n_experts // EP
+    r = jax.lax.axis_index(cfg.ep_axis)
+    k = cfg.top_k
+
+    p, ids, aux = router_topk(x, w_router, k)
+    local = (ids // E_loc) == r                     # (T, k) mine?
+    local_e = jnp.where(local, ids % E_loc, -1).reshape(-1)   # (T*k,)
+    C_dec = _round_up(max(int(2.0 * T * k / cfg.n_experts), 8), 8)
+
+    row_map_exp, _ = _expert_plan(local_e, E_loc, C_dec)
+    tok_of_slot = jnp.where(row_map_exp >= 0, row_map_exp // k, -1)
+
+    if recipe.is_fp8:
+        # W8A8 serving path: quantize activations once; weights quantized in
+        # the grouped GEMM (forward-only, no backward dataflow concerns).
+        q = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
+        d = _take_rows(q.data, tok_of_slot)
+        s = _take_rows(q.scale, tok_of_slot, fill=1.0)
+        ffn_in = QTensor(d.reshape(E_loc, C_dec, D),
+                         s.reshape(E_loc, C_dec, D // TILE), (1, 1, TILE))
+    else:
+        ffn_in = _take_rows(x.astype(jnp.bfloat16), tok_of_slot)
+        ffn_in = ffn_in.reshape(E_loc, C_dec, D)
+
+    y_exp = expert_ffn(recipe, cfg.act, (), (), ffn_in, w13, w2)
+
+    p_of_slot = jnp.where(
+        row_map_exp >= 0,
+        p.reshape(-1)[jnp.maximum(row_map_exp, 0)], 0.0)
+    y_exp = y_exp * p_of_slot.reshape(E_loc, C_dec)[..., None].astype(y_exp.dtype)
+
+    seg = jnp.where(tok_of_slot >= 0, tok_of_slot, T)
+    y = jax.ops.segment_sum(
+        y_exp.reshape(E_loc * C_dec, D).astype(jnp.float32), seg,
+        num_segments=T + 1)[:T]
+    y = jax.lax.psum(y, cfg.ep_axis)
+    return y.astype(x.dtype), {"aux_loss": aux,
+                               "drop_frac": jnp.float32(0.0)}

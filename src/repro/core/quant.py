@@ -1,0 +1,203 @@
+"""Tile-quantized FP8 tensors (QTensor) and the quantize/dequantize ops.
+
+Quantization follows the paper (Eq. 2): per-tile scaling over 128 contiguous
+elements, scale = po2(ceil)(amax / 448) by default (power-of-two scales are the
+enabler for the scaling-aware transpose, §3.1).  ``scale_mode='linear'``
+reproduces the conventional TE/DeepSeek recipe (s = amax/448, arbitrary float)
+used as the double-quantization-error baseline.
+
+A ``QTensor`` carries:
+  data  : fp8 payload (e4m3 by default)
+  scale : f32 power-of-two scales, one per tile; shape[i] = data.shape[i]/tile[i]
+  tile  : static per-axis tile sizes, e.g. (1, 128) row-wise, (128, 128) weights
+
+Every quantize/dequantize call is recorded on the active CastLedger (see
+``casts.py``) — this is how the 12-vs-2 cast accounting of Fig. 2 is asserted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import casts
+from repro.core.fp8 import E4M3, FMT_MAX, TILE, po2_scale
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    data: jax.Array
+    scale: jax.Array
+    tile: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def nbytes_model(self) -> int:
+        """Bytes this tensor occupies (payload + scales) — used by memory bench."""
+        return self.data.size * 1 + self.scale.size * 4
+
+
+def _scale_shape(shape, tile):
+    assert len(shape) == len(tile), (shape, tile)
+    for s, t in zip(shape, tile):
+        if s % t:
+            raise ValueError(f"shape {shape} not divisible by tile {tile}")
+    return tuple(s // t for s, t in zip(shape, tile))
+
+
+def _upsample_scale(scale: jax.Array, tile) -> jax.Array:
+    """Broadcast per-tile scales back to element resolution (materializes —
+    prefer _tiled_mul/_tiled_div, which broadcast through a reshape)."""
+    out = scale
+    for ax, t in enumerate(tile):
+        if t != 1:
+            out = jnp.repeat(out, t, axis=ax)
+    return out
+
+
+def _split_shape(shape, tile):
+    """(n0, n1, ...) -> interleaved (n0/t0, t0, ...) with 1s for the scale."""
+    xs, ss = [], []
+    for n, t in zip(shape, tile):
+        if t == 1:
+            xs.append(n)
+            ss.append(n)
+        else:
+            xs.extend((n // t, t))
+            ss.extend((n // t, 1))
+    return tuple(xs), tuple(ss)
+
+
+def _tiled_op(x, scale, tile, op):
+    """x <op> per-tile-scale WITHOUT materializing an upsampled scale tensor
+    (reshape-broadcast; §Perf: saves a full-size f32 round trip per Q/DQ)."""
+    xs, ss = _split_shape(x.shape, tile)
+    out = op(x.reshape(xs), scale.reshape(ss))
+    return out.reshape(x.shape)
+
+
+def _tile_amax(x: jax.Array, tile) -> jax.Array:
+    """amax over each tile; returns array of shape _scale_shape(x.shape, tile).
+
+    Computed in the INPUT dtype (max is exact in any float format) and
+    widened to f32 only at the reduced size — avoids materializing a full
+    f32 copy of the tensor (§Perf iteration: memory-term)."""
+    shp = []
+    red_axes = []
+    for ax, (n, t) in enumerate(zip(x.shape, tile)):
+        if t == 1:
+            shp.append(n)
+        else:
+            shp.extend((n // t, t))
+            red_axes.append(len(shp) - 1)
+    y = jnp.abs(x.reshape(shp))
+    return jnp.max(y, axis=tuple(red_axes)).astype(jnp.float32)
+
+
+def compute_scale(x: jax.Array, tile, fmt=E4M3, scale_mode: str = "po2") -> jax.Array:
+    amax = _tile_amax(x, tile)
+    fmax = FMT_MAX[fmt]
+    if scale_mode == "po2":
+        return po2_scale(amax, fmax)
+    elif scale_mode == "linear":  # conventional recipe: s = amax / 448
+        return jnp.where(amax > 0, amax / fmax, jnp.float32(1.0))
+    raise ValueError(scale_mode)
+
+
+def quantize(x: jax.Array, tile, fmt=E4M3, scale_mode: str = "po2",
+             tag: str = "q", kind: str = "quantize") -> QTensor:
+    """Quantize a dense tensor to per-tile fp8. Counted on the CastLedger.
+
+    kind='quantize' is an explicit cast; kind='fused_quantize' marks a
+    quantization folded into a surrounding kernel (not counted by Fig. 2)."""
+    casts.record(kind, tag, x.size)
+    scale = compute_scale(x, tile, fmt, scale_mode)
+    fmax = FMT_MAX[fmt]
+    if x.dtype == jnp.bfloat16 and scale_mode == "po2":
+        # division by a power of two is EXACT in bf16, and bf16 -> e4m3
+        # rounds identically to f32 -> e4m3 (e4m3's mantissa is shorter):
+        # same bits as the f32 path at half the intermediate bytes.
+        xf = _tiled_op(x, scale.astype(jnp.bfloat16), tile,
+                       lambda a, b: a / b)
+        data = jnp.clip(xf, jnp.bfloat16(-fmax), jnp.bfloat16(fmax)).astype(fmt)
+    else:
+        xf = _tiled_op(x.astype(jnp.float32), scale, tile, lambda a, b: a / b)
+        data = jnp.clip(xf, -fmax, fmax).astype(fmt)
+    return QTensor(data=data, scale=scale, tile=tuple(tile))
+
+
+def quantize_rowwise(x: jax.Array, fmt=E4M3, scale_mode="po2", tag="q_row",
+                     kind="quantize") -> QTensor:
+    """1 x TILE tiles along the last axis (Fprop/Dgrad activation layout)."""
+    tile = (1,) * (x.ndim - 1) + (TILE,)
+    return quantize(x, tile, fmt, scale_mode, tag=tag, kind=kind)
+
+
+def quantize_colwise(x: jax.Array, fmt=E4M3, scale_mode="po2", tag="q_col") -> QTensor:
+    """TILE x 1 tiles along the second-to-last axis (Wgrad layout, untransposed)."""
+    tile = (1,) * (x.ndim - 2) + (TILE, 1)
+    return quantize(x, tile, fmt, scale_mode, tag=tag)
+
+
+def quantize_blockwise(w: jax.Array, fmt=E4M3, scale_mode="po2", tag="q_wblk") -> QTensor:
+    """TILE x TILE blocks over the last two axes (weight layout, DeepGEMM-style)."""
+    tile = (1,) * (w.ndim - 2) + (TILE, TILE)
+    return quantize(w, tile, fmt, scale_mode, tag=tag)
+
+
+def dequantize(q: QTensor, dtype=jnp.bfloat16, tag: str = "dq",
+               kind: str = "dequantize") -> jax.Array:
+    """Counted on the CastLedger."""
+    casts.record(kind, tag, q.data.size)
+    return _dequantize_nocount(q, dtype)
+
+
+def _dequantize_nocount(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    if dtype == jnp.bfloat16:
+        # e4m3 -> bf16 is exact, and x * po2 is exact in bf16: skip the f32
+        # intermediate (halves dequant bytes; bit-identical for po2 scales)
+        return _tiled_op(q.data.astype(jnp.bfloat16),
+                         q.scale.astype(jnp.bfloat16), q.tile,
+                         lambda a, b: a * b)
+    return _tiled_op(q.data.astype(jnp.float32), q.scale, q.tile,
+                     lambda a, b: a * b).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# FP8 GEMM contract.  The kernel consumes fp8 payloads + per-tile scales and
+# accumulates in f32 (MXU contract); this XLA-path implementation upcasts at
+# the MXU boundary — NOT a counted "cast" because no materialized Q/DQ tensor
+# round-trips through HBM (the upcast lives inside the fused GEMM on TPU).
+# ---------------------------------------------------------------------------
+def qdot(qx: QTensor, qw: QTensor, out_dtype=jnp.bfloat16,
+         precision=None) -> jax.Array:
+    """(..., M, K) tile-(1,TILE) @ (K, N) tile-(TILE,TILE) -> (..., M, N).
+
+    Contraction over the last axis of qx and first payload axis of qw.
+    """
+    xf = _dequantize_nocount(qx, jnp.float32)
+    wf = _dequantize_nocount(qw, jnp.float32)
+    out = jnp.matmul(xf, wf, precision=precision)
+    return out.astype(out_dtype)
+
+
+def qdot_general(qx: QTensor, qw: QTensor, dimension_numbers,
+                 out_dtype=jnp.bfloat16, precision=None) -> jax.Array:
+    xf = _dequantize_nocount(qx, jnp.float32)
+    wf = _dequantize_nocount(qw, jnp.float32)
+    out = jax.lax.dot_general(xf, wf, dimension_numbers, precision=precision)
+    return out.astype(out_dtype)

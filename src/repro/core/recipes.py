@@ -1,0 +1,66 @@
+"""Precision-recipe configuration — the four dataflows of paper Fig. 2.
+
+  bf16      (2a)  FP32/BF16 mixed precision, no quantization anywhere.
+  blockwise (2b)  TransformerEngine-style: FP8 confined to the grouped
+                  linears; BF16 communication; activations saved in BF16.
+                  8 explicit activation casts per MoE fwd+bwd.
+  naive_fp8 (2c)  DeepSeek-V3-style drop-in FP8 kernels: FP8 dispatch with
+                  Q/DQ at the comm boundary, FP8-saved activations whose
+                  Wgrad layouts are rebuilt by dequantize->transpose->
+                  requantize — the double-quantization-error sites.
+                  12 explicit activation casts per MoE fwd+bwd.
+  fp8_flow  (2d)  This paper: po2 scales, scaling-aware direct transpose,
+                  fused SwiGLU+quant / dSwiGLU+quant / Dgrad-epilogue-quant,
+                  FP8 dispatch both directions.  2 explicit casts: the entry
+                  quantize (fwd) and the BF16-island gradient quantize (bwd).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+RECIPES = ("bf16", "blockwise", "naive_fp8", "fp8_flow")
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    name: str = "fp8_flow"
+    # 'po2' enables the scaling-aware transpose; 'linear' reproduces the
+    # conventional-amax-scale baseline (double quantization error nonzero).
+    scale_mode: str = "po2"
+    # Pallas kernels vs pure-XLA path (same math; XLA path used for the
+    # 512-device dry-run lowering, Pallas for TPU runtime + kernel tests).
+    use_pallas: bool = False
+    # Save gemm1 output h in bf16 (AC off) vs recompute from the saved FP8
+    # input in backward (FP8 activation-checkpoint compression, AC=sel).
+    save_h: bool = False
+    # Store the dispatched expert input in FP8 for backward (always true for
+    # fp8 recipes; bf16 recipe saves bf16).
+    e5m2_grads: bool = False  # use E5M2 for gradient tensors (wider range)
+
+    def __post_init__(self):
+        if self.name not in RECIPES:
+            raise ValueError(f"unknown recipe {self.name}; pick from {RECIPES}")
+
+    @property
+    def is_fp8(self) -> bool:
+        return self.name != "bf16"
+
+    @property
+    def fp8_dispatch(self) -> bool:
+        return self.name in ("naive_fp8", "fp8_flow")
+
+    @property
+    def fp8_dispatch_bwd(self) -> bool:
+        return self.name == "fp8_flow"
+
+
+BF16 = Recipe(name="bf16")
+BLOCKWISE = Recipe(name="blockwise", scale_mode="linear")
+NAIVE_FP8 = Recipe(name="naive_fp8", scale_mode="linear")
+FP8_FLOW = Recipe(name="fp8_flow", scale_mode="po2")
+
+
+def get_recipe(name: str, **kw) -> Recipe:
+    base = {"bf16": BF16, "blockwise": BLOCKWISE,
+            "naive_fp8": NAIVE_FP8, "fp8_flow": FP8_FLOW}[name]
+    return dataclasses.replace(base, **kw) if kw else base

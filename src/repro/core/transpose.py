@@ -1,0 +1,98 @@
+"""Scaling-aware FP8 transpose (paper §3.1, Algorithm 1).
+
+Converts a row-wise quantized QTensor (tiles (1,128) along the contraction
+axis) into the column-wise layout needed by Wgrad — WITHOUT dequantizing or
+requantizing, hence without double quantization error.
+
+Mechanism (requires power-of-two scales):
+  per 128x128 block,  s_max = max of the 128 row scales in the block,
+  every element is re-based onto s_max by subtracting
+  k = log2(s_max / s_row) from its e4m3 exponent.  Because both scales are
+  powers of two the mantissa is untouched: the dequantized VALUE is bit-exact,
+  except when the re-based encoding underflows below the e4m3 subnormal grid —
+  exactly the elements a correct requantization at scale s_max would also
+  flush.  The transposed output carries one scale (s_max) per (row-tile,
+  block) — coarser than fresh requantization but exact.
+
+This module is the XLA-path implementation: multiply-by-2^(-k) in f32 and a
+saturating cast, which is bit-identical to the exponent-bit manipulation
+(property-tested against the Pallas bit-twiddle kernel in
+``kernels/fp8_transpose.py``).
+
+``transpose_naive`` is the baseline the paper replaces:
+dequantize -> transpose -> requantize (fresh scales) — with 'linear' scales it
+exhibits the double quantization error of Eq. (1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import casts
+from repro.core.fp8 import BLOCK, E4M3, FMT_MAX, TILE
+from repro.core.quant import QTensor, dequantize, quantize_rowwise
+
+
+def _check_rowwise_2d(q: QTensor):
+    if q.ndim < 2 or q.tile[-1] != TILE or any(t != 1 for t in q.tile[:-1]):
+        raise ValueError(f"expected row-wise tiles (...,1,{TILE}), got {q.tile}")
+    M, K = q.shape[-2:]
+    if M % BLOCK or K % BLOCK:
+        raise ValueError(f"dims ({M},{K}) must be multiples of {BLOCK}")
+
+
+def transpose_direct(q: QTensor) -> QTensor:
+    """(..., M, K) row-wise -> (..., K, M) row-wise, scales block-aligned.
+
+    Counted as zero casts on the ledger — this is the point of the operator.
+    """
+    _check_rowwise_2d(q)
+    # NOTE: deliberately no casts.record(...) here — the operator is casting-free.
+    *lead, M, K = q.shape
+    nb_m, nb_k = M // BLOCK, K // BLOCK
+
+    # scales: (..., M, K/T) -> blocks (..., nb_m, BLOCK, nb_k)
+    s = q.scale.reshape(*lead, nb_m, BLOCK, nb_k)
+    s_max = jnp.max(s, axis=-2)                              # (..., nb_m, nb_k)
+    ratio = s / s_max[..., None, :]                          # po2, <= 1
+
+    # payload: (..., M, K) -> (..., nb_m, BLOCK, nb_k, BLOCK)
+    x = q.data.reshape(*lead, nb_m, BLOCK, nb_k, BLOCK).astype(jnp.float32)
+    # multiply by the po2 ratio: mantissa preserved, exponent shifted.
+    x = x * ratio[..., :, :, None]
+    fmax = FMT_MAX[q.dtype if q.dtype in FMT_MAX else E4M3]
+    x = jnp.clip(x, -fmax, fmax).astype(q.dtype)
+
+    # transpose blocks and within blocks: out[k, m] = x[m, k]
+    nd = x.ndim
+    perm = tuple(range(nd - 4)) + (nd - 2, nd - 1, nd - 4, nd - 3)
+    xt = jnp.transpose(x, perm).reshape(*lead, K, M)
+
+    # out scale: one per (output row, block of 128 output cols) = s_max[bm, bk]
+    # broadcast s_max (..., nb_m, nb_k) -> (..., K, nb_m)
+    s_out = jnp.transpose(s_max, tuple(range(s_max.ndim - 2)) + (s_max.ndim - 1, s_max.ndim - 2))
+    s_out = jnp.repeat(s_out, BLOCK, axis=-2)                # (..., K, nb_m)
+    tile = (1,) * len(lead) + (1, TILE)
+    return QTensor(data=xt, scale=s_out, tile=tile)
+
+
+def transpose_naive(q: QTensor, scale_mode: str = "po2") -> QTensor:
+    """Baseline: dequantize -> transpose -> requantize (2 counted casts)."""
+    xf = dequantize(q, jnp.float32, tag="dq_transpose")
+    xt = jnp.swapaxes(xf, -1, -2)
+    return quantize_rowwise(xt, fmt=q.dtype, scale_mode=scale_mode, tag="q_transpose")
+
+
+def double_quant_error(x: jax.Array, scale_mode: str = "linear") -> jax.Array:
+    """Paper Eq. (1): E = Q_col(D(Q_row(X))) - Q_col(X), dequantized to f32.
+
+    With scale_mode='linear' (conventional recipe) this is generically nonzero;
+    with 'po2' scales the rounding grid is preserved and E vanishes except for
+    subnormal-underflow elements.
+    """
+    from repro.core.quant import quantize_colwise, _dequantize_nocount
+    q_row = quantize_rowwise(x, scale_mode=scale_mode, tag="q_err_row")
+    x_rt = dequantize(q_row, jnp.float32, tag="dq_err")
+    q_col_rt = quantize_colwise(x_rt, scale_mode=scale_mode, tag="q_err_col_rt")
+    q_col = quantize_colwise(x, scale_mode=scale_mode, tag="q_err_col")
+    return _dequantize_nocount(q_col_rt) - _dequantize_nocount(q_col)

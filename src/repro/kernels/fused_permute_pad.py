@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused permute + padding for FP8 payload+scales (§3.3.1).
+
+Reorders dispatched tokens so each expert's rows are contiguous AND pads each
+expert group to a multiple of 128 rows (the TPU MXU alignment; the paper pads
+to 16 for Hopper tensor cores) — in a single pass over HBM.  The row map is
+scalar-prefetched into SMEM (`PrefetchScalarGridSpec`), so the BlockSpec index
+map can route each output row to its source row with the DMA engine double-
+buffering row fetches across grid steps; padding rows (map == -1) are written
+as zeros by masking in-kernel.
+
+The same kernel runs the backward unpermute+unpad with the inverse map.
+Payload and its (1,TILE) scale column move together — data + scales in one
+kernel, two fewer HBM round trips than separate permute/pad/scale-copy ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _permute_kernel(idx_ref, x_ref, s_ref, xo_ref, so_ref):
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    xo_ref[...] = jnp.where(valid, x_ref[...], jnp.zeros_like(x_ref))
+    # padding scale is 1.0 so a downstream dequant of a zero payload stays 0
+    so_ref[...] = jnp.where(valid, s_ref[...], jnp.ones_like(s_ref))
+
+
+def fused_permute_pad_pallas(x, s, row_map, n_out, *, interpret: bool = True):
+    """x: (T, D) payload; s: (T, Ds) scales; row_map: (n_out,) int32 source row
+    for each output row (-1 = padding).  Returns ((n_out, D), (n_out, Ds))."""
+    T, D = x.shape
+    Ds = s.shape[1]
+
+    def src_map(i, idx_ref):
+        return (jnp.maximum(idx_ref[i], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[
+            pl.BlockSpec((1, D), src_map),
+            pl.BlockSpec((1, Ds), src_map),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, Ds), lambda i, idx_ref: (i, 0)),
+        ),
+    )
+    return pl.pallas_call(
+        _permute_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_out, D), x.dtype),
+            jax.ShapeDtypeStruct((n_out, Ds), s.dtype),
+        ),
+        interpret=interpret,
+    )(row_map, x, s)

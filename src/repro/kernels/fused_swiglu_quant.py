@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused SwiGLU + row-wise FP8 quantization (paper §3.3.2).
+
+Input is the grouped-GEMM-1 output h = [gate | up] (M, 2F) in bf16 (the
+paper's deliberate BF16 island).  One kernel pass computes
+silu(gate) * up and quantizes it straight to e4m3 + po2 scales — the
+activation never round-trips through HBM in bf16, which is the fusion the
+paper measures in Fig. 5.
+
+Grid: (M/ROWS, F/TILE).  Per step the gate and up (ROWS, TILE) blocks are
+fetched from the two halves of the last axis via separate BlockSpec index
+maps; output is the e4m3 payload block + its scale column.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fp8 import E4M3, E4M3_MAX, TILE
+
+ROWS = 128
+
+
+def _swiglu_quant_kernel(gate_ref, up_ref, data_ref, scale_ref):
+    g = gate_ref[...].astype(jnp.float32)
+    u = up_ref[...].astype(jnp.float32)
+    y = (g * jax.lax.logistic(g)) * u                      # SwiGLU, f32
+    amax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    safe = jnp.maximum(amax, jnp.float32(1e-38))
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+    s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+    data_ref[...] = jnp.clip(y / s, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+    scale_ref[...] = s
+
+
+def fused_swiglu_quant_pallas(h: jax.Array, *, interpret: bool = True):
+    """h: (M, 2F) bf16 [gate | up] -> (data (M, F) e4m3, scale (M, F/TILE))."""
+    M, twoF = h.shape
+    F = twoF // 2
+    assert M % ROWS == 0 and F % TILE == 0, (M, F)
+    nb_f = F // TILE
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, F), E4M3),
+        jax.ShapeDtypeStruct((M, nb_f), jnp.float32),
+    )
+    return pl.pallas_call(
+        _swiglu_quant_kernel,
+        grid=(M // ROWS, nb_f),
+        in_specs=[
+            pl.BlockSpec((ROWS, TILE), lambda i, j: (i, j)),          # gate half
+            pl.BlockSpec((ROWS, TILE), lambda i, j, nb=nb_f: (i, j + nb)),  # up half
+        ],
+        out_specs=(
+            pl.BlockSpec((ROWS, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((ROWS, 1), lambda i, j: (i, j)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(h, h)

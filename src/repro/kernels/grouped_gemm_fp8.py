@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: FP8 grouped GEMM with per-tile scaling (DeepGEMM-on-TPU).
+
+out[e] = (x[e] . sx[e]) @ (w[e] . sw[e])   for every expert e, where
+  x  : (E, C, K)  e4m3, row-wise (1,TILE) scales sx (E, C, K/TILE)
+  w  : (E, K, N)  e4m3, (TILE,TILE) block scales  sw (E, K/TILE, N/TILE)
+  out: (E, C, N)  bf16
+
+Grid: (E, C/BM, N/BN, K/BK) with BK == TILE so each K-step contributes one
+scale product; partials accumulate in an f32 VMEM scratch (MXU contract:
+fp8 x fp8 -> f32).  The expert dimension rides the grid, so ragged groups
+cost only their padded tiles — padding rows are zero and contribute nothing.
+
+Block shapes are 128-aligned for the MXU; x/w blocks stream HBM->VMEM once
+per (m,n,k) tile visit with the accumulator resident across the K loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fp8 import TILE
+
+BM = 128
+BN = 128
+BK = TILE  # must equal the scale tile
+
+
+def _gg_kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)                   # (BM, BK) fp8 payload
+    w = w_ref[0].astype(jnp.float32)                   # (BK, BN)
+    partial = jax.lax.dot(x, w,
+                          precision=jax.lax.Precision.HIGHEST)  # f32 accum
+    sx = sx_ref[0]                                     # (BM, 1) act scales
+    sw = sw_ref[0, 0, 0]                               # scalar weight scale
+    acc_ref[...] += partial * (sx * sw)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gg_quant_kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref, os_ref, acc_ref,
+                     *, nk: int):
+    """Same as _gg_kernel but the epilogue quantizes the (BM, BN=TILE) output
+    tile to e4m3 + a po2 scale column — the 'fused epilogue quantization' that
+    keeps Dgrad outputs in FP8 without an explicit cast kernel (§3.2)."""
+    from repro.core.fp8 import E4M3, E4M3_MAX
+
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    partial = jax.lax.dot(x, w, precision=jax.lax.Precision.HIGHEST)
+    sx = sx_ref[0]
+    sw = sw_ref[0, 0, 0]
+    acc_ref[...] += partial * (sx * sw)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        acc = acc_ref[...]
+        amax = jnp.max(jnp.abs(acc), axis=-1, keepdims=True)
+        safe = jnp.maximum(amax, jnp.float32(1e-38))
+        exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+        s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+        o_ref[0, ...] = jnp.clip(acc / s, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+        os_ref[0, ...] = s
+
+
+def grouped_gemm_fp8_pallas(x, sx, w, sw, *, out_dtype=jnp.bfloat16,
+                            quant_out: bool = False, interpret: bool = True):
+    E, C, K = x.shape
+    _, _, N = w.shape
+    assert C % BM == 0 and N % BN == 0 and K % BK == 0, (C, K, N)
+    nk = K // BK
+    grid = (E, C // BM, N // BN, nk)
+    in_specs = [
+        pl.BlockSpec((1, BM, BK), lambda e, m, n, k: (e, m, k)),
+        pl.BlockSpec((1, BM, 1), lambda e, m, n, k: (e, m, k)),
+        pl.BlockSpec((1, BK, BN), lambda e, m, n, k: (e, k, n)),
+        pl.BlockSpec((1, 1, 1), lambda e, m, n, k: (e, k, n)),
+    ]
+    if not quant_out:
+        return pl.pallas_call(
+            functools.partial(_gg_kernel, nk=nk),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, BM, BN), lambda e, m, n, k: (e, m, n)),
+            out_shape=jax.ShapeDtypeStruct((E, C, N), out_dtype),
+            scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+            interpret=interpret,
+        )(x, sx, w, sw)
+
+    from repro.core.fp8 import E4M3
+    return pl.pallas_call(
+        functools.partial(_gg_quant_kernel, nk=nk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, BM, BN), lambda e, m, n, k: (e, m, n)),
+            pl.BlockSpec((1, BM, 1), lambda e, m, n, k: (e, m, n)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, C, N), E4M3),
+            jax.ShapeDtypeStruct((E, C, N // BN), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(x, sx, w, sw)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: FP8 grouped GEMM, NT layout (Wgrad form).
+
+out[e] = (a[e] . sa[e]) @ (b[e] . sb[e])^T  with contraction over the LAST
+axis of both operands:
+  a  : (E, M, C) e4m3, row-wise (1,TILE) scales sa (E, M, C/TILE)
+  b  : (E, N, C) e4m3, row-wise (1,TILE) scales sb (E, N, C/TILE)
+  out: (E, M, N) f32 (weight gradients accumulate in f32)
+
+This is exactly the shape the scaling-aware direct transpose produces: Wgrad
+consumes T(activations) and T(grad) — both row-tiled over the token axis —
+with no dequantize/requantize anywhere (paper §3.1/§3.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fp8 import TILE
+
+BM = 128
+BN = 128
+BK = TILE
+
+
+def _gg_nt_kernel(a_ref, sa_ref, b_ref, sb_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0].astype(jnp.float32)                   # (BM, BK)
+    b = b_ref[0].astype(jnp.float32)                   # (BN, BK)
+    partial = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST)           # (BM, BN) f32
+    sa = sa_ref[0]                                     # (BM, 1)
+    sb = sb_ref[0]                                     # (BN, 1)
+    acc_ref[...] += partial * (sa * sb.T)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_gemm_nt_fp8_pallas(a, sa, b, sb, *, out_dtype=jnp.float32,
+                               interpret: bool = True):
+    E, M, C = a.shape
+    _, N, _ = b.shape
+    assert M % BM == 0 and N % BN == 0 and C % BK == 0, (M, N, C)
+    nk = C // BK
+    grid = (E, M // BM, N // BN, nk)
+    kernel = functools.partial(_gg_nt_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BM, BK), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, BM, 1), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, BN, BK), lambda e, m, n, k: (e, n, k)),
+            pl.BlockSpec((1, BN, 1), lambda e, m, n, k: (e, n, k)),
+        ],
+        out_specs=pl.BlockSpec((1, BM, BN), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(a, sa, b, sb)

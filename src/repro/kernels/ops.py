@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernel suite.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs in Python, validating TPU semantics); on a TPU runtime set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the backend default) to compile them
+to Mosaic.  Every wrapper has a matching pure-jnp oracle in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+from repro.core.fp8 import TILE
+from repro.kernels.fp8_transpose import fp8_transpose_pallas
+from repro.kernels.fused_permute_pad import fused_permute_pad_pallas
+from repro.kernels.fused_swiglu_quant import fused_swiglu_quant_pallas
+from repro.kernels.grouped_gemm_fp8 import grouped_gemm_fp8_pallas
+from repro.kernels.grouped_gemm_nt_fp8 import grouped_gemm_nt_fp8_pallas
+from repro.kernels.quantize import quantize_rowwise_pallas
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_rowwise(x: jax.Array, interpret: bool | None = None) -> QTensor:
+    interpret = _interpret_default() if interpret is None else interpret
+    data, scale = quantize_rowwise_pallas(x, interpret=interpret)
+    return QTensor(data=data, scale=scale, tile=(1, TILE))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fp8_transpose(q: QTensor, interpret: bool | None = None) -> QTensor:
+    interpret = _interpret_default() if interpret is None else interpret
+    data, scale = fp8_transpose_pallas(q.data, q.scale, interpret=interpret)
+    return QTensor(data=data, scale=scale, tile=(1, TILE))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_swiglu_quant(h: jax.Array, interpret: bool | None = None) -> QTensor:
+    interpret = _interpret_default() if interpret is None else interpret
+    data, scale = fused_swiglu_quant_pallas(h, interpret=interpret)
+    return QTensor(data=data, scale=scale, tile=(1, TILE))
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def fused_permute_pad(q: QTensor, row_map: jax.Array, n_out: int,
+                      interpret: bool | None = None) -> QTensor:
+    interpret = _interpret_default() if interpret is None else interpret
+    data, scale = fused_permute_pad_pallas(q.data, q.scale, row_map, n_out,
+                                           interpret=interpret)
+    return QTensor(data=data, scale=scale, tile=(1, TILE))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_gemm_fp8(qx: QTensor, qw: QTensor, interpret: bool | None = None):
+    """qx: (E, C, K) row-wise; qw: (E, K, N) block-wise -> (E, C, N) bf16."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return grouped_gemm_fp8_pallas(qx.data, qx.scale, qw.data, qw.scale,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_gemm_fp8_quant_out(qx: QTensor, qw: QTensor,
+                               interpret: bool | None = None) -> QTensor:
+    """Grouped GEMM whose epilogue quantizes straight to e4m3 (Dgrad path)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    data, scale = grouped_gemm_fp8_pallas(qx.data, qx.scale, qw.data, qw.scale,
+                                          quant_out=True, interpret=interpret)
+    return QTensor(data=data, scale=scale, tile=(1, 1, TILE))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_gemm_nt_fp8(qa: QTensor, qb: QTensor,
+                        interpret: bool | None = None):
+    """qa: (E, M, C), qb: (E, N, C) both row-wise over C -> (E, M, N) f32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return grouped_gemm_nt_fp8_pallas(qa.data, qa.scale, qb.data, qb.scale,
+                                      interpret=interpret)

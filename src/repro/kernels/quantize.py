@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: row-wise per-128-tile FP8 quantization (po2 scales).
+
+Grid: (M/ROWS, K/TILE).  Each step loads a (ROWS, TILE) bf16/f32 block into
+VMEM, computes the per-row po2 scale for that 128-wide tile, and writes the
+e4m3 payload + the scale column.  One HBM read + two writes; the amax
+reduction and the exponent ceil run on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fp8 import E4M3, E4M3_MAX, TILE
+
+ROWS = 128  # token rows per block
+
+
+def _quantize_kernel(x_ref, data_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (ROWS, TILE)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)     # (ROWS, 1)
+    safe = jnp.maximum(amax, jnp.float32(1e-38))
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+    s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+    y = jnp.clip(x / s, -E4M3_MAX, E4M3_MAX)
+    data_ref[...] = y.astype(E4M3)
+    scale_ref[...] = s
+
+
+def quantize_rowwise_pallas(x: jax.Array, *, interpret: bool = True):
+    """x: (M, K) -> (data (M, K) e4m3, scale (M, K/TILE) f32 po2)."""
+    M, K = x.shape
+    assert M % ROWS == 0 and K % TILE == 0, (M, K)
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, K), E4M3),
+        jax.ShapeDtypeStruct((M, K // TILE), jnp.float32),
+    )
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(M // ROWS, K // TILE),
+        in_specs=[pl.BlockSpec((ROWS, TILE), lambda i, j: (i, j))],
+        out_specs=(
+            pl.BlockSpec((ROWS, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((ROWS, 1), lambda i, j: (i, j)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact reference semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8 import BLOCK, E4M3, E4M3_MAX, TILE
+
+
+def quantize_rowwise_ref(x: jax.Array):
+    """Oracle for kernels/quantize.py."""
+    M, K = x.shape
+    xf = x.astype(jnp.float32).reshape(M, K // TILE, TILE)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    safe = jnp.maximum(amax, jnp.float32(1e-38))
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+    s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+    y = jnp.clip(xf / s[..., None], -E4M3_MAX, E4M3_MAX).astype(E4M3)
+    return y.reshape(M, K), s
+
+
+def fp8_transpose_ref(data: jax.Array, scale: jax.Array):
+    """Oracle for kernels/fp8_transpose.py — the po2-exact f32 formulation.
+
+    Multiplying an e4m3 value by a power-of-two ratio <= 1 in f32 and casting
+    back to e4m3 is mathematically identical to the integer exponent-rebase
+    (mantissa untouched; RNE into the subnormal grid on underflow).
+    """
+    M, K = data.shape
+    nb_m, nb_k = M // BLOCK, K // BLOCK
+    s = scale.reshape(nb_m, BLOCK, nb_k)
+    s_max = jnp.max(s, axis=1)                                   # (nb_m, nb_k)
+    ratio = s / s_max[:, None, :]
+    x = data.reshape(nb_m, BLOCK, nb_k, BLOCK).astype(jnp.float32)
+    x = x * ratio[:, :, :, None]
+    xt = jnp.transpose(x.astype(E4M3), (2, 3, 0, 1)).reshape(K, M)
+    s_out = jnp.repeat(jnp.swapaxes(s_max, 0, 1), BLOCK, axis=0)  # (K, nb_m)
+    return xt, s_out
+
+
+def fused_swiglu_quant_ref(h: jax.Array):
+    """Oracle for kernels/fused_swiglu_quant.py."""
+    M, twoF = h.shape
+    F = twoF // 2
+    g = h[:, :F].astype(jnp.float32)
+    u = h[:, F:].astype(jnp.float32)
+    y = g * jax.lax.logistic(g) * u
+    return quantize_rowwise_ref(y)
+
+
+def grouped_gemm_fp8_ref(x, sx, w, sw, out_dtype=jnp.bfloat16):
+    """Oracle for kernels/grouped_gemm_fp8.py — per-K-tile scaled accumulation
+    in the same order as the kernel (K-major partial sums in f32)."""
+    E, C, K = x.shape
+    N = w.shape[-1]
+    nk = K // TILE
+    xf = x.astype(jnp.float32).reshape(E, C, nk, TILE)
+    wf = w.astype(jnp.float32).reshape(E, nk, TILE, N)
+    acc = jnp.zeros((E, C, N), jnp.float32)
+    for k in range(nk):
+        partial = jnp.einsum("ect,etn->ecn", xf[:, :, k], wf[:, k],
+                             precision=jax.lax.Precision.HIGHEST)
+        swk = jnp.repeat(sw[:, k], TILE, axis=-1)[:, None, :]     # (E,1,N)
+        acc = acc + partial * sx[:, :, k][..., None] * swk
+    return acc.astype(out_dtype)
+
+
+def grouped_gemm_nt_fp8_ref(a, sa, b, sb, out_dtype=jnp.float32):
+    """Oracle for kernels/grouped_gemm_nt_fp8.py (Wgrad NT form)."""
+    E, M, C = a.shape
+    N = b.shape[1]
+    nk = C // TILE
+    af = a.astype(jnp.float32).reshape(E, M, nk, TILE)
+    bf = b.astype(jnp.float32).reshape(E, N, nk, TILE)
+    acc = jnp.zeros((E, M, N), jnp.float32)
+    for k in range(nk):
+        partial = jnp.einsum("emt,ent->emn", af[:, :, k], bf[:, :, k],
+                             precision=jax.lax.Precision.HIGHEST)
+        acc = acc + partial * sa[:, :, k][..., None] * sb[:, :, k][:, None, :]
+    return acc.astype(out_dtype)
+
+
+def grouped_gemm_fp8_quant_out_ref(x, sx, w, sw):
+    """Oracle for the quantizing-epilogue grouped GEMM."""
+    out = grouped_gemm_fp8_ref(x, sx, w, sw, out_dtype=jnp.float32)
+    E, C, N = out.shape
+    flat = out.reshape(E * C, N)
+    data, scale = quantize_rowwise_ref(flat)
+    return data.reshape(E, C, N), scale.reshape(E, C, N // TILE)
+
+
+def fused_permute_pad_ref(x, s, row_map, n_out):
+    """Oracle for kernels/fused_permute_pad.py."""
+    valid = (row_map >= 0)[:, None]
+    src = jnp.maximum(row_map, 0)
+    xo = jnp.where(valid, x[src], jnp.zeros((n_out, x.shape[1]), x.dtype))
+    so = jnp.where(valid, s[src], jnp.ones((n_out, s.shape[1]), s.dtype))
+    return xo, so

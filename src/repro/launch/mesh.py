@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: a leading pod=2 axis = 512 chips; the pod axis carries pure
+    data parallelism (gradient all-reduce over the slow inter-pod links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for single-process tests."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

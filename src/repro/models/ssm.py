@@ -1,0 +1,128 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked training form + O(1)
+decode recurrence.  Pure JAX/BF16: the recurrent state accumulation is
+exactly the reduction class the paper keeps out of FP8 (DESIGN.md §6);
+the in/out projections could use the FP8 linear recipe but their irregular
+widths (2*di + 2*N + nh) break 128-tile alignment, so they stay BF16 —
+recorded as partial applicability."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+def _segsum(log_a):
+    """log_a: (..., Q).  out[..., i, j] = sum_{j < k <= i} log_a_k (else -inf)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # sum_(j,i]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+      x : (b, S, H, P)   per-head inputs
+      dt: (b, S, H)      positive step sizes
+      A : (H,)           negative per-head decay rates
+      B : (b, S, N)      input maps   (n_groups = 1, broadcast over heads)
+      C : (b, S, N)      output maps
+    Returns y (b, S, H, P) and the final state (b, H, P, N)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, (S, Q)
+
+    xb = x.reshape(b, nc, Q, H, P)
+    dtb = dt.reshape(b, nc, Q, H)
+    Bb = B.reshape(b, nc, Q, N)
+    Cb = C.reshape(b, nc, Q, N)
+    log_a = (dtb * A[None, None, None, :])                # (b,nc,Q,H) negative
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(log_a, -1, -2)))     # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)        # (b,nc,Q,Q)
+    M = scores[:, :, None] * L                            # (b,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", M, dtb, xb)
+
+    # chunk state contributions
+    csum = jnp.cumsum(log_a, axis=2)                      # (b,nc,Q,H)
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)     # (b,nc,Q,H)
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                         Bb, dtb * decay_to_end, xb)      # (b,nc,H,P,N)
+    a_chunk = jnp.exp(csum[:, :, -1, :])                  # (b,nc,H)
+
+    # inter-chunk scan (sequential over nc — the recurrent reduction)
+    def body(state, inp):
+        S_c, a_c = inp                                    # (b,H,P,N),(b,H)
+        new = state * a_c[..., None, None] + S_c
+        return new, state                                 # emit state BEFORE chunk
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        body, init, (jnp.moveaxis(S_chunk, 1, 0).astype(jnp.float32),
+                     jnp.moveaxis(a_chunk, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (b,nc,H,P,N)
+
+    decay_from_start = jnp.exp(csum)                      # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cb, decay_from_start, prev_states.astype(Cb.dtype))
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, final
+
+
+def mamba2_block(cfg, p, x, *, state=None, conv_state=None, decode=False):
+    """Full Mamba2 mixer.  x: (B, S, D).
+    Training (decode=False): returns (y, None, None).
+    Decode (S == 1): returns (y, new_state (B,H,P,N), new_conv (B,conv-1,ch))."""
+    Bsz, S, D = x.shape
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    conv = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+
+    # causal depthwise conv over [xs|B|C]
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)          # (B,S,ch)
+    if decode:
+        hist = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_conv = hist[:, -(conv - 1):]
+        xbc = jnp.einsum("bck,ck->bk", hist[:, -conv:],
+                         p["conv_w"].astype(xbc.dtype))[:, None, :]
+    else:
+        pad = jnp.zeros((Bsz, conv - 1, xbc.shape[-1]), xbc.dtype)
+        hist = jnp.concatenate([pad, xbc], axis=1)
+        xbc = sum(hist[:, i:i + S] * p["conv_w"][i].astype(xbc.dtype)
+                  for i in range(conv))
+        new_conv = None
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    xh = xs.reshape(Bsz, S, H, P)
+
+    if decode:
+        a = jnp.exp(dt[:, 0, :] * A[None, :])             # (B,H)
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0], xh[:, 0])
+        new_state = state * a[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], new_state)[:, None]
+        y = y.reshape(Bsz, 1, H, P)
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2) then output projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["norm_s"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, new_state if decode else None, new_conv

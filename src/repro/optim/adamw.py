@@ -1,0 +1,95 @@
+"""AdamW with FP32 master weights, optional BF16 moments, global-norm clip.
+
+Built from scratch (no optax dependency).  At scale the optimizer state is
+the dominant memory term, so each piece is dtype-configurable:
+  master  : f32 copy of params (params themselves may live in bf16)
+  m, v    : f32 or bf16 (bf16 moments are standard at >100B scale)
+State sharding (ZeRO-1 over the data axis) is applied by the caller via
+in/out shardings on the update step — the math here is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32      # bf16 at >100B scale
+    master_weights: bool = True
+
+
+def init_state(cfg: AdamWConfig, params):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
+                          params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
+                          params),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, master):
+        g32 = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        base = master.astype(jnp.float32) if master is not None \
+            else p.astype(jnp.float32)
+        new_master = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        return (new_master.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype), new_master if master is not None
+                else None)
+
+    masters = state.get("master")
+    if masters is None:
+        masters = jax.tree.map(lambda _: None, params,
+                               is_leaf=lambda x: x is None)
+        triples = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                               params, grads, state["m"], state["v"])
+    else:
+        triples = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                               masters)
+
+    new_params = jax.tree.map(lambda t: t[0], triples,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {
+        "step": step,
+        "m": jax.tree.map(lambda t: t[1], triples,
+                          is_leaf=lambda x: isinstance(x, tuple)),
+        "v": jax.tree.map(lambda t: t[2], triples,
+                          is_leaf=lambda x: isinstance(x, tuple)),
+    }
+    if cfg.master_weights:
+        new_state["master"] = jax.tree.map(
+            lambda t: t[3], triples, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

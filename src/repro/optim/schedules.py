@@ -1,0 +1,15 @@
+"""LR schedules: linear warmup + cosine decay (the paper trains with the
+standard DeepSeek recipe; exact constants are configurable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps=2000, total_steps=100_000,
+                  min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)

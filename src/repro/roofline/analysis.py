@@ -1,0 +1,154 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms, all in seconds-per-step on the TPU v5e target:
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the compiled module is
+the per-device SPMD partition, so these are per-chip numbers).  Collective
+bytes are NOT in cost_analysis — we parse the compiled HLO text and sum the
+payload bytes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (all-reduce counts 2x: reduce + broadcast phases of a
+ring).  Scale buffers of FP8 collectives are counted like any other payload
+— the paper's 'doubled buffers' effect is visible in the term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e per-chip constants (DESIGN.md §5)
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_FP8 = 394e12        # fp8-native MXU ceiling (v6e-class), reported
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link (≈ one active direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start", "ragged-all-to-all")
+
+# matches e.g.:  %all-gather.3 = bf16[8,128]{1,0} all-gather(bf16[1,128] %x)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(k for k in _COLL_KINDS) + r")\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(\s*((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s*("
+    + "|".join(k for k in _COLL_KINDS) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind payload bytes of every collective in the (per-device) HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        kind = None
+        for k in _COLL_KINDS:
+            if f" {k}(" in line:
+                kind = k.replace("-start", "")
+                break
+        if kind is None:
+            continue
+        # output payload(s): every shape on the LHS of '='
+        lhs = line.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        shapes = _SHAPE_RE.findall(lhs[1].split(kind + "(")[0])
+        nbytes = sum(_nbytes(dt, dims) for dt, dims in shapes)
+        factor = 2 if kind == "all-reduce" else 1   # reduce + broadcast
+        out[kind] = out.get(kind, 0) + nbytes * factor
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip bytes accessed
+    coll_bytes: float            # per-chip collective payload bytes
+    coll_by_kind: Dict[str, int]
+    model_flops: float           # 6*N*D useful flops (per chip)
+    n_chips: int
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self):
+        """No-overlap model: the dominant term bounds the step."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self):
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self):
+        """Model-flops utilization at the no-overlap step time."""
+        if self.step_time == 0:
+            return 0.0
+        return self.model_flops / PEAK_FLOPS_BF16 / self.step_time
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops, "n_chips": self.n_chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "step_time": self.step_time, "mfu": self.mfu,
+            "useful_fraction": self.useful_fraction,
+        }
+
+
+def analyze(compiled, *, model_flops_global: float, n_chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops=flops, hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_by_kind=coll,
+        model_flops=model_flops_global / n_chips,
+        n_chips=n_chips)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6*N_active*D (the standard 'useful' training flops)."""
+    return 6.0 * cfg.active_params() * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_params() * tokens

@@ -1,0 +1,58 @@
+"""Render the dry-run sweep JSON into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_t(s):
+    return f"{s * 1e3:8.1f}"
+
+
+def render(path: str, multi_pod: bool = False) -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    recs = [r for r in recs if r.get("ok") and r["multi_pod"] == multi_pod]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    mesh = "2x16x16 (512)" if multi_pod else "16x16 (256)"
+    out = [f"Mesh {mesh} — per-chip roofline terms (ms/step), v5e constants.",
+           "",
+           "| arch | shape | peak GiB | t_comp | t_mem | t_coll | bottleneck "
+           "| MFU | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r["memory"]["peak_bytes_est"] / 2 ** 30
+        ro = r["roofline"]
+        fit = "" if m <= 16.0 else " (!)"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {m:.1f}{fit} "
+            f"| {_fmt_t(ro['t_compute'])} | {_fmt_t(ro['t_memory'])} "
+            f"| {_fmt_t(ro['t_collective'])} | {ro['bottleneck']} "
+            f"| {ro['mfu']:.1%} | {ro['useful_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def summary(path: str) -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    ok = [r for r in recs if r.get("ok")]
+    n_fit = sum(1 for r in ok
+                if r["memory"]["peak_bytes_est"] / 2 ** 30 <= 16.0)
+    bn = {}
+    for r in ok:
+        if not r["multi_pod"]:
+            bn[r["roofline"]["bottleneck"]] = \
+                bn.get(r["roofline"]["bottleneck"], 0) + 1
+    return (f"{len(ok)}/{len(recs)} cells compiled; "
+            f"{n_fit}/{len(ok)} within the 16 GiB v5e budget "
+            f"(CPU-measured, unfused-temp pessimistic); "
+            f"single-pod bottlenecks: {bn}")
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun/sweep.json"
+    print(summary(p))
+    print()
+    print(render(p, multi_pod=False))
+    print()
+    print(render(p, multi_pod=True))

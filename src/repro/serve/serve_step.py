@@ -1,0 +1,34 @@
+"""The jitted serving step: one decode token against a resident KV/SSM cache
+(continuous-batching style: `pos` is per-request; this reference serve step
+uses a shared position for the dry-run shapes, which model fixed-phase
+decode benches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.recipes import Recipe
+from repro.models.lm import ParallelPlan, decode_step, init_cache
+
+
+def make_serve_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(cfg, recipe, plan, params, cache,
+                                        tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan):
+    """Prefill forward (logits only) — lowered for the prefill_32k cells."""
+    from repro.models.lm import forward
+
+    def prefill(params, batch):
+        logits, metrics = forward(cfg, recipe, plan, params, batch,
+                                  compute_loss=False)
+        return logits[:, -1, :]
+
+    return prefill

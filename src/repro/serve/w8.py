@@ -1,0 +1,62 @@
+"""W8-resident serving: pre-quantized FP8 expert/MLP weights.
+
+Extends the paper's FP8-weight format (blockwise po2 scales — the exact
+layout the training GEMMs consume) to SERVING residency: instead of
+FSDP-sharded BF16 weights gathered per layer (the collective-bound decode
+baseline, EXPERIMENTS.md §Perf cell 3), the big weights live on-chip as
+e4m3 payload + po2 scales — half the bytes, zero gather traffic, and the
+grouped GEMM consumes them directly (weights are quantized ONCE here, not
+per step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8 import TILE
+from repro.core.quant import QTensor, quantize
+
+# param leaves converted to resident FP8 for serving (the big matmul weights;
+# norms/router/biases stay f32, attention projections stay bf16 — they are
+# small and latency-critical)
+_W8_LEAVES = {
+    "we13": (1, 1, TILE, 1, TILE),   # (L, E, D, g, Fe)
+    "we2": (1, 1, TILE, TILE),       # (L, E, Fe, D)
+}
+
+
+def _pad_ok(shape, tile):
+    return all(n % t == 0 for n, t in zip(shape, tile))
+
+
+def quantize_params_for_serving(params):
+    """Replace the big matmul weights with blockwise-po2 QTensors."""
+    def conv(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        name = keys[-1]
+        if name in _W8_LEAVES:
+            tile = _W8_LEAVES[name]
+            if len(tile) == leaf.ndim and _pad_ok(leaf.shape, tile):
+                return quantize(leaf, tile, tag=f"q_w8_{name}",
+                                kind="fused_quantize")
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(conv, params)
+
+
+def is_w8(p) -> bool:
+    return isinstance(p, QTensor)
+
+
+def w8_merge_gate(q: QTensor):
+    """(E, D, g, Fe) blockwise QTensor -> (E, D, g*Fe): exact block
+    relabeling (gate/up halves stay contiguous)."""
+    E, D, g, Fe = q.data.shape
+    return QTensor(data=q.data.reshape(E, D, g * Fe),
+                   scale=q.scale.reshape(E, D // TILE, g * Fe // TILE),
+                   tile=(1, TILE, TILE))
+
+
+def retile(q: QTensor, tile) -> QTensor:
+    """Fix up the static tile metadata after tree-level slicing."""
+    return QTensor(data=q.data, scale=q.scale, tile=tuple(tile))

@@ -1,0 +1,71 @@
+"""The training loop: checkpoint/restart, health monitoring, elastic
+re-meshing, async checkpointing — the control plane around train_step."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointing
+from repro.data.pipeline import DataConfig, make_batch
+from repro.runtime.fault_tolerance import ElasticTrainer
+
+
+def run(train_step: Callable, state, data_cfg: DataConfig, *,
+        n_steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+        log_every: int = 10, elastic: Optional[ElasticTrainer] = None,
+        grad_accum: int = 1, fail_injector: Optional[Callable] = None,
+        log_fn=print):
+    """Runs `n_steps`, restarting from the latest checkpoint if present.
+    `fail_injector(step)` lets tests simulate host failures/stragglers."""
+    start = 0
+    if ckpt_dir is not None:
+        latest = checkpointing.latest_step(ckpt_dir)
+        if latest is not None:
+            state, start = checkpointing.restore(ckpt_dir, state)
+            start += 1
+            log_fn(f"[loop] restored checkpoint step={start - 1}")
+
+    history = []
+    pending_save = None
+    for step in range(start, n_steps):
+        t0 = time.monotonic()
+        batch = make_batch(data_cfg, step)
+        if grad_accum > 1:
+            batch = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
+                                    *a.shape[1:]), batch)
+        state, metrics = train_step(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.monotonic() - t0
+        history.append({"step": step, "loss": loss, "dt": dt})
+
+        if elastic is not None:
+            if fail_injector is not None:
+                fail_injector(step, elastic)
+            elastic.step_report(0, dt)
+            remesh, reassign = elastic.plan_step()
+            if remesh:
+                log_fn(f"[loop] host failure at step {step}: shrinking to "
+                       f"{elastic.n_data_shards} data shards; restoring "
+                       f"checkpoint and continuing")
+                if ckpt_dir is not None and \
+                        checkpointing.latest_step(ckpt_dir) is not None:
+                    state, _ = checkpointing.restore(ckpt_dir, state)
+            elif reassign:
+                log_fn(f"[loop] stragglers reassigned: {reassign}")
+
+        if step % log_every == 0:
+            log_fn(f"[loop] step={step} loss={loss:.4f} "
+                   f"gnorm={float(metrics.get('grad_norm', 0)):.3f} "
+                   f"dt={dt*1e3:.0f}ms")
+        if ckpt_dir is not None and step % ckpt_every == 0 and step > 0:
+            if pending_save is not None:
+                pending_save.join()
+            pending_save = checkpointing.save(ckpt_dir, step, state,
+                                              async_=True)
+    if pending_save is not None:
+        pending_save.join()
+    return state, history

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA device-count override here — smoke tests
+and benches see the real single CPU device; only dryrun/sweep force 512."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_mesh11():
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

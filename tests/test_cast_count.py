@@ -1,0 +1,98 @@
+"""The paper's headline accounting (Fig. 2): explicit Q/DQ casts per MoE
+forward+backward — 12 (naive drop-in FP8) -> 2 (FP8-Flow-MoE)."""
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import casts
+from repro.core.linear import expert_ffn, quantize_entry
+from repro.core.moe import MoEConfig, moe_block
+from repro.core.recipes import get_recipe
+from tests.conftest import make_mesh11
+
+EXPECTED_FFN = {"bf16": 0, "blockwise": 8, "naive_fp8": 10, "fp8_flow": 1}
+EXPECTED_MOE = {"bf16": 0, "blockwise": 8, "naive_fp8": 12, "fp8_flow": 2}
+
+
+def _ffn_loss(recipe):
+    r = np.random.default_rng(0)
+    E, C, K, F = 2, 128, 256, 128
+    x = jnp.asarray(r.normal(size=(E, C, K)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    w13 = jnp.asarray(r.normal(size=(E, K, 2 * F)).astype(np.float32) * 0.05)
+    w2 = jnp.asarray(r.normal(size=(E, F, K)).astype(np.float32) * 0.05)
+
+    def L(x, w13, w2):
+        xi = quantize_entry(recipe, x) if recipe.name == "fp8_flow" else x
+        y = expert_ffn(recipe, "swiglu", (), (), xi, w13, w2)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    return L, (x, w13, w2)
+
+
+@pytest.mark.parametrize("name", list(EXPECTED_FFN))
+def test_ffn_cast_count(name):
+    recipe = get_recipe(name)
+    L, args = _ffn_loss(recipe)
+    with casts.ledger() as led:
+        jax.grad(L, argnums=(0, 1, 2))(*args)
+    n = led.activation_casts()
+    # fp8_flow counts the entry quantize here too (no dispatch boundary)
+    expected = EXPECTED_FFN[name] + (1 if name == "fp8_flow" else 0)
+    assert n == expected, led.summary()
+
+
+@pytest.mark.parametrize("name", list(EXPECTED_MOE))
+def test_moe_block_cast_count(name):
+    """Full MoE block (router+dispatch+experts+combine) on a 1x1 mesh."""
+    recipe = get_recipe(name)
+    mesh = make_mesh11()
+    E, D, F, topk, T = 4, 256, 128, 2, 256
+    cfg = MoEConfig(n_experts=E, top_k=topk, d_model=D, d_ff=F)
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(T, D)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    wr = jnp.asarray(r.normal(size=(D, E)).astype(np.float32) * 0.02)
+    w13 = jnp.asarray(r.normal(size=(E, D, 2 * F)).astype(np.float32) * 0.05)
+    w2 = jnp.asarray(r.normal(size=(E, F, D)).astype(np.float32) * 0.05)
+
+    def body(x, wr, w13, w2):
+        y, m = moe_block(recipe, cfg, x, wr, w13, w2)
+        return jax.lax.psum(jnp.sum(y.astype(jnp.float32) ** 2),
+                            ("data", "model"))
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(P(("data", "model"), None), P(None, None),
+                             P("model", None, None), P("model", None, None)),
+                   out_specs=P())
+    with casts.ledger() as led:
+        jax.grad(lambda *a: jnp.sum(sm(*a)), argnums=(0, 1, 2, 3))(
+            x, wr, w13, w2)
+    assert led.activation_casts() == EXPECTED_MOE[name], led.summary()
+
+
+def test_flow_has_zero_dequantize_ops():
+    """fp8_flow's explicit casts are both QUANTIZE ops — no dequantize ever
+    materializes (the casting-free property)."""
+    recipe = get_recipe("fp8_flow")
+    L, args = _ffn_loss(recipe)
+    with casts.ledger() as led:
+        jax.grad(L, argnums=(0, 1, 2))(*args)
+    explicit_dq = [e for e in led.events if e.kind == "dequantize"]
+    assert not explicit_dq
+
+
+def test_naive_has_double_quant_sites():
+    """naive_fp8 must contain the dequantize->requantize pairs the paper
+    identifies as the double-quantization-error sites."""
+    recipe = get_recipe("naive_fp8")
+    L, args = _ffn_loss(recipe)
+    with casts.ledger() as led:
+        jax.grad(L, argnums=(0, 1, 2))(*args)
+    tags = [e.tag for e in led.events if e.kind == "dequantize"]
+    assert "dq_transpose" in tags

@@ -1,0 +1,148 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and value distributions."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fp8 import TILE
+from repro.core.quant import QTensor, quantize, _dequantize_nocount
+from repro.kernels import ops, ref
+
+
+def _bits(a):
+    return np.asarray(a).view(np.uint8)
+
+
+def _x(seed, *shape, spread=1.5):
+    r = np.random.default_rng(seed)
+    return jnp.asarray((r.normal(size=shape)
+                        * np.exp(r.normal(size=shape) * spread)
+                        ).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (256, 384), (384, 256)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_quantize_kernel(shape, seed):
+    x = _x(seed, *shape)
+    q = ops.quantize_rowwise(x)
+    dr, sr = ref.quantize_rowwise_ref(x)
+    assert np.array_equal(_bits(q.data), _bits(dr))
+    assert np.array_equal(np.asarray(q.scale), np.asarray(sr))
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (256, 128), (128, 256),
+                                   (384, 384)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fp8_transpose_kernel_bit_exact(shape, seed):
+    """The integer exponent-rebase kernel must match the po2-multiply oracle
+    BIT FOR BIT (including RNE shifts into the subnormal range)."""
+    x = _x(seed, *shape, spread=2.5)
+    q = ops.quantize_rowwise(x)
+    qt = ops.fp8_transpose(q)
+    dr, sr = ref.fp8_transpose_ref(q.data, q.scale)
+    assert np.array_equal(_bits(qt.data), _bits(dr))
+    assert np.array_equal(np.asarray(qt.scale), np.asarray(sr))
+
+
+def test_fp8_transpose_subnormal_edge():
+    """Force large scale spread within a block so re-basing shifts values
+    deep into (and past) the subnormal range."""
+    r = np.random.default_rng(3)
+    x = r.normal(size=(128, 128)).astype(np.float32)
+    x[::2] *= 2.0 ** 12    # alternate rows huge -> s_max >> s of small rows
+    x[1::2] *= 2.0 ** -10
+    q = ops.quantize_rowwise(jnp.asarray(x))
+    qt = ops.fp8_transpose(q)
+    dr, sr = ref.fp8_transpose_ref(q.data, q.scale)
+    assert np.array_equal(_bits(qt.data), _bits(dr))
+
+
+@pytest.mark.parametrize("m,f", [(128, 128), (256, 256), (128, 384)])
+def test_fused_swiglu_quant_kernel(m, f):
+    h = _x(11, m, 2 * f, spread=0.5).astype(jnp.bfloat16)
+    q = ops.fused_swiglu_quant(h)
+    dr, sr = ref.fused_swiglu_quant_ref(h)
+    assert np.array_equal(_bits(q.data), _bits(dr))
+    assert np.array_equal(np.asarray(q.scale), np.asarray(sr))
+
+
+@pytest.mark.parametrize("e,c,k,n", [(2, 128, 128, 128), (4, 128, 256, 128),
+                                     (1, 256, 384, 256)])
+def test_grouped_gemm_kernel(e, c, k, n):
+    x = _x(5, e, c, k, spread=0.5)
+    w = _x(6, e, k, n, spread=0.3) * 0.05
+    qx = quantize(x, (1, 1, TILE), tag="t")
+    qw = quantize(w, (1, TILE, TILE), tag="t")
+    out_k = ops.grouped_gemm_fp8(qx, qw)
+    out_r = ref.grouped_gemm_fp8_ref(qx.data, qx.scale, qw.data, qw.scale)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # against the dequantized ground truth (same math, unordered sum)
+    gt = np.einsum("eck,ekn->ecn",
+                   np.asarray(_dequantize_nocount(qx, jnp.float32)),
+                   np.asarray(_dequantize_nocount(qw, jnp.float32)))
+    rel = np.abs(np.asarray(out_k, np.float32) - gt) / (np.abs(gt) + 1e-2)
+    assert rel.mean() < 2e-2
+
+
+@pytest.mark.parametrize("e,m,n,c", [(2, 128, 128, 128), (1, 256, 128, 256)])
+def test_grouped_gemm_nt_kernel(e, m, n, c):
+    a = _x(7, e, m, c, spread=0.5)
+    b = _x(8, e, n, c, spread=0.5) * 0.1
+    qa = quantize(a, (1, 1, TILE), tag="t")
+    qb = quantize(b, (1, 1, TILE), tag="t")
+    out_k = ops.grouped_gemm_nt_fp8(qa, qb)
+    out_r = ref.grouped_gemm_nt_fp8_ref(qa.data, qa.scale, qb.data, qb.scale)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_grouped_gemm_quant_out_kernel():
+    e, c, k, n = 2, 128, 256, 128
+    x = _x(9, e, c, k, spread=0.5)
+    w = _x(10, e, k, n, spread=0.3) * 0.05
+    qx = quantize(x, (1, 1, TILE), tag="t")
+    qw = quantize(w, (1, TILE, TILE), tag="t")
+    q_k = ops.grouped_gemm_fp8_quant_out(qx, qw)
+    dr, sr = ref.grouped_gemm_fp8_quant_out_ref(qx.data, qx.scale,
+                                                qw.data, qw.scale)
+    assert np.array_equal(_bits(q_k.data), _bits(dr))
+    assert np.array_equal(np.asarray(q_k.scale), np.asarray(sr))
+
+
+@pytest.mark.parametrize("t,d,n_out", [(32, 256, 48), (64, 128, 64),
+                                       (16, 128, 40)])
+def test_fused_permute_pad_kernel(t, d, n_out):
+    r = np.random.default_rng(12)
+    x = jnp.asarray(r.normal(size=(t, d))).astype(jnp.float8_e4m3fn)
+    sc = jnp.asarray(np.exp2(r.integers(-8, 8, (t, d // TILE))
+                             ).astype(np.float32))
+    row_map = np.full(n_out, -1, np.int32)
+    perm = r.permutation(t)[:min(t, n_out)]
+    row_map[:len(perm)] = perm
+    row_map = jnp.asarray(row_map)
+    q = QTensor(data=x, scale=sc, tile=(1, TILE))
+    out = ops.fused_permute_pad(q, row_map, n_out)
+    xr, sr = ref.fused_permute_pad_ref(x, sc, row_map, n_out)
+    assert np.array_equal(_bits(out.data), _bits(xr))
+    assert np.array_equal(np.asarray(out.scale), np.asarray(sr))
+
+
+def test_xla_path_matches_pallas_path():
+    """linear.py's XLA fallbacks must agree with the Pallas kernels (the
+    dry-run lowers the XLA path; TPU runs the kernels)."""
+    from repro.core.linear import _ggemm, _ggemm_nt, _t_direct
+    from repro.core.recipes import get_recipe
+    r_x = get_recipe("fp8_flow", use_pallas=False)
+    r_p = get_recipe("fp8_flow", use_pallas=True)
+    x = _x(13, 2, 128, 256, spread=0.5)
+    w = _x(14, 2, 256, 128, spread=0.3) * 0.05
+    qx = quantize(x, (1, 1, TILE), tag="t")
+    qw = quantize(w, (1, TILE, TILE), tag="t")
+    np.testing.assert_allclose(
+        np.asarray(_ggemm(r_x, qx, qw), np.float32),
+        np.asarray(_ggemm(r_p, qx, qw), np.float32), rtol=2e-2, atol=2e-2)
+    ta, tb = _t_direct(r_x, qx), _t_direct(r_p, qx)
+    assert np.array_equal(_bits(ta.data), _bits(tb.data))

