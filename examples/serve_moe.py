@@ -1,26 +1,29 @@
-"""Serving example: batched autoregressive decoding with a KV cache
-(optionally FP8-compressed) against a reduced MoE model.
+"""Serving example: continuous batching over a reduced MoE model — paged
+FP8 KV cache, W8-resident expert weights, FCFS scheduling with a token
+budget, interleaved prefill/decode in one jitted step.
 
-Run:  PYTHONPATH=src python examples/serve_moe.py [--fp8-kv]
+Run:  PYTHONPATH=src python examples/serve_moe.py [--bf16-kv] [--temperature 0.8]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro.core.recipes import get_recipe
 from repro.launch.mesh import make_test_mesh
-from repro.models.lm import ParallelPlan, init_cache, init_params
-from repro.serve.serve_step import make_serve_step
+from repro.models.lm import ParallelPlan, init_params
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fp8-kv", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--bf16-kv", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_arch("qwen3_moe_235b").reduced()
@@ -28,24 +31,31 @@ def main():
     plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
     recipe = get_recipe("fp8_flow")
     params = init_params(cfg, jax.random.key(0))
-    cache = init_cache(cfg, args.batch, 128, fp8_kv=args.fp8_kv)
-    cache_bytes = sum(x.size * x.dtype.itemsize
-                      for x in jax.tree.leaves(cache))
-    print(f"KV cache: {cache_bytes/2**20:.1f} MiB "
-          f"({'fp8' if args.fp8_kv else 'bf16'})")
 
-    step = jax.jit(make_serve_step(cfg, recipe, plan))
-    toks = jnp.ones((args.batch, 1), jnp.int32)
-    out = []
-    with mesh:
-        t0 = time.perf_counter()
-        for t in range(args.tokens):
-            toks, cache = step(params, cache, toks, jnp.int32(t))
-            out.append(jax.device_get(toks)[:, 0])
-        dt = time.perf_counter() - t0
-    print(f"decoded {args.tokens} tokens x {args.batch} reqs "
-          f"in {dt:.2f}s; first request ids: "
-          f"{[int(o[0]) for o in out[:8]]}...")
+    ecfg = ServeConfig(max_batch=4, page_size=8, n_pages=64,
+                      max_pages_per_req=8, token_budget=256,
+                      prefill_buckets=(16, 32), fp8_kv=not args.bf16_kv,
+                      w8_weights=True, top_k=8)
+    engine = ServeEngine(cfg, recipe, plan, params, ecfg)
+    print(f"paged KV pool: {engine.kv_bytes()/2**20:.1f} MiB "
+          f"({'fp8+po2-scales' if ecfg.fp8_kv else 'bf16'}), "
+          f"{ecfg.max_batch} slots, {ecfg.n_pages} pages x "
+          f"{ecfg.page_size} tokens")
+
+    r = np.random.default_rng(0)
+    reqs = [Request(prompt=list(r.integers(1, cfg.vocab,
+                                           int(r.integers(3, 15)))),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    results = engine.run(reqs, realtime=False)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v["tokens"]) for v in results.values())
+    print(f"served {len(results)} requests ({n_tok} tokens) in {dt:.2f}s; "
+          f"max concurrent batch {engine.max_concurrent}")
+    for rid in sorted(results)[:4]:
+        print(f"  req {rid}: {results[rid]['tokens']}")
 
 
 if __name__ == "__main__":

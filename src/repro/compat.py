@@ -1,0 +1,58 @@
+"""Version-robust shims over the moving parts of the jax API.
+
+The repo targets the jax version baked into the container (0.4.x today) but
+is written against the current-API names; every call site imports these
+symbols from here instead of guessing which jax exposes them:
+
+  shard_map : ``jax.shard_map`` (new) or ``jax.experimental.shard_map``
+              (0.4.x).  The old implementation's replication checker predates
+              the vma system the bodies are written for, so the fallback
+              disables ``check_rep``.
+  pvary     : ``jax.lax.pvary`` where it exists; identity on 0.4.x (which
+              has no varying-manual-axes tracking to satisfy).
+  make_mesh : ``jax.make_mesh`` with ``axis_types=Auto`` where supported;
+              plain ``jax.make_mesh(shape, axes)`` on 0.4.x (Auto is the
+              only behaviour the old version has).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary", "make_mesh", "axis_size"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        kwargs.pop("check_vma", None)
+        return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    def pvary(x, axis_name):
+        return x
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        # psum of a Python constant folds to the axis size statically
+        return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """An Auto-typed mesh on any jax version."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import casts
 from repro.core.fp8 import TILE
 from repro.core.linear import dequantize_exit, expert_ffn, quantize_entry
@@ -207,7 +208,7 @@ def fp8_dispatch_naive(recipe: Recipe, x, row_map, T: int, ep_axis: str):
 
 
 def _a2a(t, axis_name):
-    EP = jax.lax.axis_size(axis_name)
+    EP = compat.axis_size(axis_name)
     shp = t.shape
     t = t.reshape(EP, shp[0] // EP, *shp[1:])
     t = jax.lax.all_to_all(t, axis_name, split_axis=0, concat_axis=0,
@@ -243,7 +244,7 @@ def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     """x: (T, D) local tokens.  w13: (E_loc, D, 2F); w2: (E_loc, F, D);
     w_router: (D, E_total) replicated.  Returns (y (T, D), metrics dict)."""
     T, D = x.shape
-    EP = jax.lax.axis_size(cfg.ep_axis)
+    EP = compat.axis_size(cfg.ep_axis)
     E_loc = cfg.n_experts // EP
     assert E_loc * EP == cfg.n_experts, (cfg.n_experts, EP)
     k = cfg.top_k
@@ -376,7 +377,7 @@ def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     experts' tokens and the combine is a psum over ep_axis (vLLM-style EP
     serving — no all-to-all for tiny batches).  Forward-only (serving)."""
     T, D = x.shape
-    EP = jax.lax.axis_size(cfg.ep_axis)
+    EP = compat.axis_size(cfg.ep_axis)
     E_loc = cfg.n_experts // EP
     r = jax.lax.axis_index(cfg.ep_axis)
     k = cfg.top_k

@@ -1,31 +1,46 @@
-"""Serving launcher: batched decode against a KV cache.
+"""Serving launcher: continuous-batching engine over paged FP8 KV and
+W8-resident weights.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_moe_235b \
-      --reduced --tokens 16 [--fp8-kv]
+      --reduced --requests 16 [--bf16-kv] [--no-w8]
+
+Drives a synthetic trace through serve/engine.py: FCFS admission against a
+token budget, interleaved bucketed prefill + masked full-batch decode in one
+jitted step, youngest-first eviction under page pressure.  The old
+fixed-batch shared-position loop lives on in serve/serve_step.py for the
+dry-run shape cells.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro.core.recipes import get_recipe
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.launch.sharding import make_plan
-from repro.models.lm import ParallelPlan, init_cache, init_params
-from repro.serve.serve_step import make_serve_step
+from repro.models.lm import ParallelPlan, init_params
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import Request
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_moe_235b")
     ap.add_argument("--recipe", default="fp8_flow")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--fp8-kv", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--n-pages", type=int, default=128)
+    ap.add_argument("--max-pages", type=int, default=8)
+    ap.add_argument("--token-budget", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--bf16-kv", action="store_true")
+    ap.add_argument("--no-w8", action="store_true")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -39,17 +54,31 @@ def main():
 
     recipe = get_recipe(args.recipe)
     params = init_params(cfg, jax.random.key(0))
-    cache = init_cache(cfg, args.batch, args.max_len, fp8_kv=args.fp8_kv)
-    step = jax.jit(make_serve_step(cfg, recipe, plan))
-    toks = jnp.ones((args.batch, 1), jnp.int32)
-    with mesh:
-        t0 = time.perf_counter()
-        for t in range(args.tokens):
-            toks, cache = step(params, cache, toks, jnp.int32(t))
-        jax.block_until_ready(toks)
+    fp8 = recipe.name == "fp8_flow"
+    ecfg = ServeConfig(
+        max_batch=args.max_batch, page_size=args.page_size,
+        n_pages=args.n_pages, max_pages_per_req=args.max_pages,
+        token_budget=args.token_budget, prefill_buckets=(16, 32, 64),
+        fp8_kv=fp8 and not args.bf16_kv,
+        w8_weights=fp8 and not args.no_w8, seed=args.seed)
+    engine = ServeEngine(cfg, recipe, plan, params, ecfg)
+    print(f"[serve] {args.arch} recipe={recipe.name} "
+          f"kv={'fp8' if ecfg.fp8_kv else 'bf16'} "
+          f"w8={ecfg.w8_weights} pool={engine.kv_bytes()/2**20:.1f} MiB")
+
+    r = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=list(r.integers(1, cfg.vocab,
+                                           int(r.integers(3, 17)))),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    results = engine.run(reqs, realtime=False)
     dt = time.perf_counter() - t0
-    print(f"[serve] {args.tokens} tokens x {args.batch} requests in "
-          f"{dt:.2f}s ({args.tokens * args.batch / dt:.1f} tok/s)")
+    n_tok = sum(len(v["tokens"]) for v in results.values())
+    print(f"[serve] {len(results)}/{args.requests} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s), "
+          f"max concurrent {engine.max_concurrent}")
 
 
 if __name__ == "__main__":

@@ -218,12 +218,18 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 def decode_attention(q, k_cache, v_cache, *, pos, window=0, softcap=0.0):
     """Single-step decode: q (B, 1, H, hd); caches (B, Smax, KV, hd).
-    pos: scalar current position (kv [0, pos] are valid).
-    For windowed layers only the last `window` cache rows are read
-    (dynamic_slice) — the local-attention memory saving is real."""
+    pos: current position — scalar (shared phase, the fixed-batch bench path)
+    OR a (B,) vector (continuous batching: each request at its own depth);
+    kv rows [0, pos_b] are valid.
+    For windowed layers with a SCALAR pos only the last `window` cache rows
+    are read (dynamic_slice) — the local-attention memory saving is real; the
+    per-request path reads the full cache and window-masks (starts differ
+    per row, so a shared slice does not exist)."""
     B, _, H, hd = q.shape
     _, Smax, KV, _ = k_cache.shape
-    if window and window < Smax:
+    pos = jnp.asarray(pos)
+    per_request = pos.ndim == 1
+    if window and window < Smax and not per_request:
         start = jnp.clip(pos - window + 1, 0, Smax - window)
         k_r = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
         v_r = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
@@ -237,7 +243,13 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=0, softcap=0.0):
     s = jnp.einsum("bkgh,bckh->bkgc", qf, k_r.astype(jnp.float32)) * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    s = jnp.where((kv_pos <= pos)[None, None, None, :], s, NEG_INF)
+    if per_request:
+        mask = kv_pos[None, :] <= pos[:, None]          # (B, c)
+        if window:
+            mask &= kv_pos[None, :] > (pos[:, None] - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        s = jnp.where((kv_pos <= pos)[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgc,bckh->bkgh", p, v_r.astype(jnp.float32))
     return out.reshape(B, 1, H, hd).astype(q.dtype)
@@ -270,11 +282,11 @@ def _cp_constrain(plan, q, k, v):
     return q, k, v, (plan.mesh, dp, seq_ax)
 
 
-def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,
-               cache_pos=None, cross_kv=None, causal=True, plan=None):
-    """cfg: ArchConfig; p: layer param dict; x: (B, S, D).
-    cache: optional (k_cache, v_cache) for decode; cross_kv: (k, v) already
-    projected encoder states for cross-attention."""
+def project_qkv(cfg, p, x, positions, cross_kv=None):
+    """QKV projections + bias + qk-norm + RoPE (shared by the train/prefill,
+    dense-cache decode, and paged decode paths).
+    x: (B, S, D); positions: (S,) or (B, S).  Returns q (B,S,H,hd) and
+    k, v (B,S,KV,hd) (or the passed-through cross_kv)."""
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     q = jnp.einsum("bsd,dn->bsn", x, p["wq"].astype(x.dtype))
@@ -298,6 +310,18 @@ def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,
     if cross_kv is None and cfg.rope_theta:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,
+               cache_pos=None, cross_kv=None, causal=True, plan=None):
+    """cfg: ArchConfig; p: layer param dict; x: (B, S, D).
+    cache: optional (k_cache, v_cache) for decode; cache_pos scalar (shared
+    phase) or (B,) per-request; cross_kv: (k, v) already projected encoder
+    states for cross-attention."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q, k, v = project_qkv(cfg, p, x, positions, cross_kv=cross_kv)
 
     carry_sharding = None
     if cache is None:
@@ -306,10 +330,17 @@ def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,
     if cache is not None:
         k_cache, v_cache = cache
         if cross_kv is None:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+            if jnp.ndim(cache_pos) == 1:   # per-request write rows
+                rows = jnp.arange(B)
+                k_cache = k_cache.at[rows, cache_pos].set(
+                    k[:, 0].astype(k_cache.dtype))
+                v_cache = v_cache.at[rows, cache_pos].set(
+                    v[:, 0].astype(v_cache.dtype))
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
         o = decode_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                              pos=cache_pos, window=layer_window,
                              softcap=cfg.attn_softcap)

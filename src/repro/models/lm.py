@@ -204,7 +204,7 @@ def _mlp_stage(cfg, recipe, plan, p, x):
                       w13.reshape(D, g * F), w2)
         return y.reshape(B, S, D)
 
-    from jax import shard_map
+    from repro.compat import shard_map
     tp_size = plan.mesh.shape[plan.tp_axis]
     use_tp = plan.mlp_tp and mlp_tp_ok(F, tp_size)
     gather = plan.fsdp_axis
@@ -287,7 +287,7 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
         # trivial mesh is handled by callers constructing a real plan.
         raise ValueError("MoE stage requires a ParallelPlan with a mesh")
 
-    from jax import shard_map
+    from repro.compat import shard_map
     gather = plan.fsdp_axis
     # decode-EP only exists when experts are EP-sharded; TP-experts (E < tp)
     # use the same TP block for decode (forward-only)
@@ -371,7 +371,8 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
         y, aux = body(x3.reshape(Bl * Sl, Dl), wr_l, we13_l, we2_l)
         # broadcast the aux scalar onto every mesh axis so one out_spec
         # (sharded over all axes) is valid in every mode/mesh
-        aux = jax.lax.pvary(aux, tuple(
+        from repro.compat import pvary
+        aux = pvary(aux, tuple(
             a for a in all_axes if a not in getattr(aux, "vma", all_axes)))
         return y.reshape(Bl, -1, Dl), aux
 
@@ -704,12 +705,15 @@ def _cache_rw(cfg, p, kind, x, positions, pos, kc, vc, recipe, plan,
 
 def decode_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
                 cache, tokens, pos):
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (current
-    position; cache rows [0, pos) are filled).  Returns (logits (B,1,V),
-    new_cache)."""
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (shared
+    position — the fixed-batch bench path) OR (B,) int32 per-request
+    positions (continuous batching; cache rows [0, pos_b) are filled).
+    Returns (logits (B,1,V), new_cache)."""
     x = _embed_tokens(cfg, params, tokens)
     B = x.shape[0]
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos,
+                                                            jnp.int32)
     kinds = layer_kinds(cfg)
     nd = cfg.n_dense_layers if cfg.moe else 0
     new_cache = dict(cache)
@@ -840,6 +844,162 @@ def decode_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
                    "final_norm")
     logits = _lm_logits(cfg, params, x, plan)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: chunked prefill + per-request decode over paged KV pools
+# (serve/paged_kv.py).  Each request sits at its own depth (`pos` is a (B,)
+# vector), KV rows live in fixed-size pages addressed through per-request
+# page tables, and page payloads are FP8-e4m3 with per-row po2 scales (or
+# BF16 with the fallback pools).  Attention-only decoder stacks.
+# ---------------------------------------------------------------------------
+def _run_paged_stack(cfg, recipe, plan, stack_params, stack_kinds, moe, x,
+                     pool, positions, page_idx, slot_idx, *, decode,
+                     page_tables=None, pos=None):
+    """Scan a layer stack against its paged K/V pools.
+
+    pool: {"k": {"data" (n,P,ps,KV,hd) [, "scale"]}, "v": {...}}.
+    page_idx/slot_idx: (N,) write coordinates for this step's rows (scratch
+    page 0 for masked rows).  decode=True reads the paged history through
+    `page_tables` and masks by per-request `pos`; decode=False (prefill) runs
+    causal flash attention over the in-flight chunk (nothing precedes it).
+    Returns (x, new_pool)."""
+    from repro.models.layers import flash_attention, project_qkv
+    from repro.serve.paged_kv import page_read, page_write_rows
+
+    n = len(stack_kinds)
+    pat = cfg.pattern if n % len(cfg.pattern) == 0 else (stack_kinds[0],)
+    glen = len(pat)
+    ng = n // glen
+
+    def body(xc, xs):
+        new_pools = []
+        for i in range(glen):
+            pi = jax.tree.map(lambda a: a[i], xs["p"])
+            kc = jax.tree.map(lambda a: a[i], xs["k"])
+            vc = jax.tree.map(lambda a: a[i], xs["v"])
+            window = cfg.window if pat[i] == "local" else 0
+            h = apply_norm(cfg.norm, xc, pi, "ln1")
+            q, k, v = project_qkv(cfg, pi, h, positions)
+            rows_k = k[:, 0] if decode else k[0]
+            rows_v = v[:, 0] if decode else v[0]
+            kc = page_write_rows(kc, rows_k, page_idx, slot_idx)
+            vc = page_write_rows(vc, rows_v, page_idx, slot_idx)
+            if decode:
+                from repro.models.layers import decode_attention
+                kd = page_read(kc, page_tables, jnp.bfloat16)
+                vd = page_read(vc, page_tables, jnp.bfloat16)
+                o = decode_attention(q, kd.astype(q.dtype),
+                                     vd.astype(q.dtype), pos=pos,
+                                     window=window, softcap=cfg.attn_softcap)
+            else:
+                o = flash_attention(q, k, v, q_pos=positions,
+                                    kv_pos=positions, causal=True,
+                                    window=window, softcap=cfg.attn_softcap)
+            B, S = xc.shape[:2]
+            mix = jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                             pi["wo"].astype(xc.dtype))
+            xc = xc + mix
+            h2 = apply_norm(cfg.norm, xc, pi, "ln2")
+            if moe:
+                mo, _ = _moe_stage(cfg, recipe, plan, pi, h2, decode=decode)
+            else:
+                mo = _mlp_decode(cfg, pi, h2) if decode \
+                    else _mlp_stage(cfg, recipe, plan, pi, h2)
+            xc = xc + mo
+            new_pools.append({"k": kc, "v": vc})
+        emit = jax.tree.map(lambda *ys: jnp.stack(ys), *new_pools)
+        return xc, emit
+
+    grouped = lambda t: jax.tree.map(
+        lambda a: a.reshape(ng, glen, *a.shape[1:]), t)
+    xs = {"p": grouped(stack_params), "k": grouped(pool["k"]),
+          "v": grouped(pool["v"])}
+    x, emits = jax.lax.scan(body, x, xs)
+    new_pool = jax.tree.map(lambda a: a.reshape(n, *a.shape[2:]), emits)
+    return x, new_pool
+
+
+def _paged_stacks(cfg):
+    """(kinds, nd) after validating the arch is paged-serving capable."""
+    kinds = layer_kinds(cfg)
+    if cfg.encdec or cfg.frontend != "none" or any(
+            k in ("ssm", "hybrid") for k in kinds):
+        raise NotImplementedError(
+            "paged serving supports attention-only decoder stacks")
+    return kinds, (cfg.n_dense_layers if cfg.moe else 0)
+
+
+def paged_decode_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                      params, pools, page_tables, tokens, pos, active):
+    """One continuous-batching decode step over paged pools.
+
+    tokens (B, 1) int32; pos (B,) int32 per-request positions (this token's
+    position; rows [0, pos_b) are resident); active (B,) bool — inactive
+    slots write to the scratch page and their outputs are garbage;
+    page_tables (B, max_pages) int32.  Returns (logits (B,1,V), new_pools)."""
+    kinds, nd = _paged_stacks(cfg)
+    x = _embed_tokens(cfg, params, tokens)
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    ps = pools["main_attn"]["k"]["data"].shape[2]
+    page_idx = jnp.where(active,
+                         page_tables[jnp.arange(B), pos // ps], 0)
+    slot_idx = pos % ps
+
+    new_pools = dict(pools)
+    if nd:
+        x, new_pools["dense_attn"] = _run_paged_stack(
+            cfg, recipe, plan, params["dense_layers"], kinds[:nd], False, x,
+            pools["dense_attn"], positions, page_idx, slot_idx, decode=True,
+            page_tables=page_tables, pos=pos)
+    x, new_pools["main_attn"] = _run_paged_stack(
+        cfg, recipe, plan, params["layers"], kinds[nd:], cfg.moe, x,
+        pools["main_attn"], positions, page_idx, slot_idx, decode=True,
+        page_tables=page_tables, pos=pos)
+
+    x = apply_norm(cfg.norm, x, {"final_norm_s": params["final_norm_s"],
+                                 "final_norm_b": params.get("final_norm_b")},
+                   "final_norm")
+    logits = _lm_logits(cfg, params, x, plan)
+    return logits, new_pools
+
+
+def paged_prefill(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                  params, pools, page_table_row, tokens, length):
+    """Prefill ONE request's prompt chunk into its pages.
+
+    tokens (1, S) int32, right-padded to the static bucket S (a power of two
+    so flash blocking divides); length: scalar int32 true prompt length;
+    page_table_row (max_pages,) int32.  Rows >= length land on the scratch
+    page; causal masking keeps them out of every valid query's receptive
+    field.  Returns (logits (1, 1, V) at position length-1, new_pools)."""
+    kinds, nd = _paged_stacks(cfg)
+    x = _embed_tokens(cfg, params, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    ps = pools["main_attn"]["k"]["data"].shape[2]
+    page_idx = jnp.where(positions < length, page_table_row[positions // ps],
+                         0)
+    slot_idx = positions % ps
+
+    new_pools = dict(pools)
+    if nd:
+        x, new_pools["dense_attn"] = _run_paged_stack(
+            cfg, recipe, plan, params["dense_layers"], kinds[:nd], False, x,
+            pools["dense_attn"], positions, page_idx, slot_idx, decode=False)
+    x, new_pools["main_attn"] = _run_paged_stack(
+        cfg, recipe, plan, params["layers"], kinds[nd:], cfg.moe, x,
+        pools["main_attn"], positions, page_idx, slot_idx, decode=False)
+
+    x = apply_norm(cfg.norm, x, {"final_norm_s": params["final_norm_s"],
+                                 "final_norm_b": params.get("final_norm_b")},
+                   "final_norm")
+    x_last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.clip(length - 1, 0, S - 1), 1, axis=1)
+    logits = _lm_logits(cfg, params, x_last, plan)
+    return logits, new_pools
 
 
 def _mlp_decode(cfg, p, x):

@@ -1,0 +1,290 @@
+"""Continuous-batching FP8 serving engine.
+
+The piece the ROADMAP's "heavy traffic" north star needs between the model
+and the world: a request queue feeding interleaved prefill/decode over
+(a) W8-resident FP8 expert weights (serve/w8.py — quantized ONCE, the
+grouped GEMMs consume the paper's blockwise-po2 format directly) and
+(b) a paged FP8-e4m3 KV cache with per-row po2 scales (serve/paged_kv.py).
+
+Execution model
+---------------
+One engine *tick* = one call into a single jitted step function:
+
+    engine_step(..., bucket=<static>) =
+        [prefill one admitted request's prompt chunk]   (if bucket)
+      + [decode every resident request one token]       (if any resident)
+      + [sample (greedy / temperature+top-k)]
+
+All shapes are STATIC per (bucket, any_decode): decode always runs over the
+full `max_batch` slot array behind an `active` mask, and prompts are padded
+to a power-of-two bucket — so XLA compiles |buckets|+2 programs total and
+never recompiles as the batch mix changes (requests arrive/finish/evict).
+
+Scheduling is FCFS with decode priority and a reserved-token budget
+(serve/scheduler.py); KV pages come from a host-side free-list with
+youngest-first eviction under pressure (restart semantics).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.recipes import Recipe
+from repro.models.lm import (ParallelPlan, paged_decode_step, paged_prefill)
+from repro.serve.paged_kv import (PageAllocator, init_paged_cache,
+                                  pool_nbytes)
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (all static — they shape the compiled programs)."""
+    max_batch: int = 8                 # resident-request slots
+    page_size: int = 16                # tokens per KV page
+    n_pages: int = 256                 # pool pages (page 0 is scratch)
+    max_pages_per_req: int = 16        # page-table width
+    token_budget: int = 2048           # sum(prompt+max_new) over residents
+    prefill_buckets: Sequence[int] = (16, 32, 64, 128)
+    fp8_kv: bool = True                # e4m3 pages w/ po2 scales, else bf16
+    w8_weights: bool = False           # pre-quantize expert weights (fp8_flow)
+    top_k: int = 0                     # 0 -> full-vocab sampling
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+    @property
+    def max_len(self) -> int:
+        return self.max_pages_per_req * self.page_size
+
+
+def sample_tokens(logits, key, temps, top_k: int):
+    """logits (N, V); temps (N,) — greedy where temp <= 0, else
+    temperature + (optional) top-k categorical."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    if top_k:
+        kth = jax.lax.top_k(lf, top_k)[0][:, -1][:, None]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    sampled = jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def make_engine_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                     ecfg: ServeConfig):
+    """The one jitted step: optional bucketed prefill + masked full-batch
+    decode + sampling.  `bucket`/`any_decode` are static."""
+
+    @partial(jax.jit, static_argnames=("bucket", "any_decode"),
+             donate_argnums=(1,))
+    def engine_step(params, pools, page_tables, last_tok, pos, active, temps,
+                    pf_tokens, pf_len, pf_ptrow, pf_temp, key, *,
+                    bucket: Optional[int], any_decode: bool):
+        out = {}
+        if bucket is not None:
+            lg, pools = paged_prefill(cfg, recipe, plan, params, pools,
+                                      pf_ptrow, pf_tokens, pf_len)
+            out["prefill_tok"] = sample_tokens(
+                lg[:, -1, :], jax.random.fold_in(key, 0), pf_temp[None],
+                ecfg.top_k)[0]
+        if any_decode:
+            lg, pools = paged_decode_step(cfg, recipe, plan, params, pools,
+                                          page_tables, last_tok[:, None],
+                                          pos, active)
+            out["decode_toks"] = sample_tokens(
+                lg[:, -1, :], jax.random.fold_in(key, 1), temps, ecfg.top_k)
+        return pools, out
+
+    return engine_step
+
+
+class ServeEngine:
+    """Continuous-batching serving over paged FP8 KV + W8-resident weights.
+
+    Usage::
+
+        eng = ServeEngine(cfg, recipe, plan, params, ServeConfig(...))
+        results = eng.run([Request(prompt=[...], max_new_tokens=8), ...])
+    """
+
+    def __init__(self, cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                 params, ecfg: ServeConfig = ServeConfig()):
+        self.cfg, self.recipe, self.plan, self.ecfg = cfg, recipe, plan, ecfg
+        if ecfg.w8_weights and recipe.name == "fp8_flow":
+            from repro.serve.w8 import quantize_params_for_serving
+            params = quantize_params_for_serving(params)
+        self.params = params
+        self.pools = init_paged_cache(cfg, ecfg.n_pages, ecfg.page_size,
+                                      fp8_kv=ecfg.fp8_kv)
+        self.alloc = PageAllocator(ecfg.n_pages, ecfg.page_size)
+        self.sched = Scheduler(ecfg.max_batch, ecfg.token_budget)
+        self._step_fn = make_engine_step(cfg, recipe, plan, ecfg)
+        self._key = jax.random.key(ecfg.seed)
+        self._tick_count = 0
+        self.max_concurrent = 0
+        self.total_decoded = 0
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        ecfg = self.ecfg
+        P = len(req.prompt)
+        if P < 1 or req.max_new_tokens < 1:
+            raise ValueError("empty prompt / zero max_new_tokens")
+        if P > max(ecfg.prefill_buckets):
+            raise ValueError(f"prompt {P} exceeds the largest prefill "
+                             f"bucket {max(ecfg.prefill_buckets)}")
+        if P + req.max_new_tokens > ecfg.max_len:
+            raise ValueError(f"request needs {P + req.max_new_tokens} "
+                             f"tokens > max_len {ecfg.max_len}")
+        if req.reserved_tokens > ecfg.token_budget:
+            raise ValueError("request alone exceeds the token budget")
+        if self.alloc.pages_for(P + req.max_new_tokens) > ecfg.n_pages - 1:
+            raise ValueError("request alone exceeds the KV pool")
+        self.sched.submit(req)
+
+    # -- one tick ----------------------------------------------------------
+    def _grow_pages(self, st: RequestState) -> bool:
+        """Ensure st's page table covers its next write; evicts YOUNGER
+        residents under pressure (st self-evicts when it is the youngest —
+        the oldest resident always progresses).  False if st got unseated."""
+        need = st.next_pos // self.ecfg.page_size + 1
+        while len(st.pages) < need:
+            got = self.alloc.alloc(1)
+            if got is not None:
+                st.pages.extend(got)
+                continue
+            # evict_youngest(requester=st) always has a victim (st itself at
+            # worst); the too-small-pool case is rejected in submit()
+            ev = self.sched.evict_youngest(self.alloc, requester=st)
+            assert ev is not None
+            if ev is st:
+                return False
+        return st.slot in self.sched.active
+
+    def tick(self, now: float, results: Dict[int, dict]) -> bool:
+        """One engine tick; returns True if any work ran."""
+        ecfg, sched = self.ecfg, self.sched
+
+        # decode set: resident + prefilled, with page headroom (may evict)
+        for slot in sorted(sched.active):
+            st = sched.active.get(slot)
+            if st is not None and st.prefilled:
+                self._grow_pages(st)
+        decode_slots = [s for s in sorted(sched.active)
+                        if sched.active[s].prefilled]
+
+        # decode-priority admission: at most one prefill rides this tick
+        adm = sched.try_admit(self.alloc, now)
+        if adm is None and not decode_slots:
+            return False
+
+        B, mp = ecfg.max_batch, ecfg.max_pages_per_req
+        pt = np.zeros((B, mp), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        last = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        for s in decode_slots:
+            st = sched.active[s]
+            pt[s, :len(st.pages)] = st.pages
+            pos[s] = st.next_pos
+            active[s] = True
+            last[s] = st.generated[-1]
+            temps[s] = st.req.temperature
+
+        bucket = None
+        pf_tokens = np.zeros((1, 1), np.int32)
+        pf_len = np.int32(0)
+        pf_ptrow = np.zeros((mp,), np.int32)
+        pf_temp = np.float32(0.0)
+        if adm is not None:
+            P = len(adm.req.prompt)
+            bucket = min(b for b in ecfg.prefill_buckets if b >= P)
+            pf_tokens = np.zeros((1, bucket), np.int32)
+            pf_tokens[0, :P] = adm.req.prompt
+            pf_len = np.int32(P)
+            pf_ptrow[:len(adm.pages)] = adm.pages
+            pf_temp = np.float32(adm.req.temperature)
+
+        key = jax.random.fold_in(self._key, self._tick_count)
+        ctx = self.plan.mesh if self.plan.mesh is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            self.pools, out = self._step_fn(
+                self.params, self.pools, jnp.asarray(pt), jnp.asarray(last),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(temps),
+                jnp.asarray(pf_tokens), pf_len, jnp.asarray(pf_ptrow),
+                pf_temp, key, bucket=bucket, any_decode=bool(decode_slots))
+        out = jax.device_get(out)
+        self._tick_count += 1
+        self.max_concurrent = max(self.max_concurrent,
+                                  len(decode_slots) + (adm is not None))
+
+        if adm is not None:
+            self._emit(adm, int(out["prefill_tok"]), now, results)
+        if decode_slots:
+            toks = out["decode_toks"]
+            for s in decode_slots:
+                st = sched.active.get(s)
+                if st is None:
+                    continue
+                self._emit(st, int(toks[s]), now, results)
+        return True
+
+    def _emit(self, st: RequestState, tok: int, now: float,
+              results: Dict[int, dict]) -> None:
+        st.generated.append(tok)
+        st.prefilled = True
+        self.total_decoded += 1
+        if st.first_token_time is None:
+            st.first_token_time = now
+        if st.done(self.ecfg.eos_id):
+            self.sched.finish(st.slot, self.alloc, now)
+            results[st.req.rid] = {
+                "tokens": list(st.generated),
+                "arrival": st.req.arrival_time,
+                "admit": st.admit_time,
+                "first_token": st.first_token_time,
+                "finish": now,
+                "n_evictions": st.n_evictions,
+            }
+
+    # -- driver ------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            realtime: bool = True) -> Dict[int, dict]:
+        """Drive a full trace to completion.  With realtime=True arrivals
+        are honored against the wall clock (Poisson traces); otherwise every
+        request is enqueued immediately (closed-loop saturation)."""
+        pending = deque(sorted(requests, key=lambda r: r.arrival_time))
+        results: Dict[int, dict] = {}
+        t0 = time.perf_counter()
+        idle_spins = 0
+        while pending or not self.sched.idle():
+            now = time.perf_counter() - t0
+            while pending and (not realtime
+                               or pending[0].arrival_time <= now):
+                self.submit(pending.popleft())
+            if self.tick(now, results):
+                idle_spins = 0
+                continue
+            if pending:
+                time.sleep(max(0.0, min(0.002,
+                                        pending[0].arrival_time - now)))
+                continue
+            idle_spins += 1
+            if idle_spins > 1000:
+                raise RuntimeError(
+                    "scheduler deadlock: waiting requests can never be "
+                    "admitted (check token_budget / n_pages)")
+        return results
+
+    # -- reporting ---------------------------------------------------------
+    def kv_bytes(self) -> int:
+        return pool_nbytes(self.pools)

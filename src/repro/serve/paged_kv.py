@@ -1,0 +1,152 @@
+"""Paged KV cache: fixed-size pages, a host-side free-list allocator, and
+FP8-e4m3 page payloads with per-row po2 scales (BF16 fallback).
+
+Layout (vLLM-style block tables, shared across layers):
+
+  pool["data"]  : (L, n_pages, page_size, KV, hd)   e4m3 or bf16 payload
+  pool["scale"] : (L, n_pages, page_size, KV, 1)    f32 po2 scales (fp8 only)
+
+One page id addresses the same page row in EVERY layer of a stack, so a
+request needs exactly one page table (max_pages,) int32 regardless of depth.
+Page 0 is reserved as the scratch page: writes for inactive slots / padded
+prefill rows land there and are never read back (attention masks by `pos`),
+which keeps every scatter dense and branch-free under jit.
+
+Quantization reuses ``core/quant``: each written K/V row is a per-(token,
+head) tile over hd elements — ``quantize(..., tile=(..,1,hd))`` producing a
+``QTensor`` whose payload+scales are scattered into the page; reads gather
+pages and rebuild a ``QTensor`` for ``_dequantize_nocount``.  po2 scales make
+the FP8 page round-trip add no double-quantization error beyond the single
+entry quantization (the paper's Eq. 5-8 idempotence property).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, _dequantize_nocount, quantize
+
+SCRATCH_PAGE = 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side free-list allocator.
+# ---------------------------------------------------------------------------
+class PageAllocator:
+    """Free-list over page ids [1, n_pages); page 0 is the scratch page."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is scratch)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free = deque(range(1, n_pages))
+        self._allocated = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None (caller decides to wait/evict) — never partial."""
+        if n > len(self._free):
+            return None
+        out = [self._free.popleft() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free / foreign page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# Device-side pools.
+# ---------------------------------------------------------------------------
+def init_pool(n_layers: int, n_pages: int, page_size: int, n_kv: int,
+              head_dim: int, fp8: bool = True):
+    """One K or V pool for an n_layers-deep stack."""
+    shape = (n_layers, n_pages, page_size, n_kv, head_dim)
+    if fp8:
+        return {"data": jnp.zeros(shape, jnp.float8_e4m3fn),
+                "scale": jnp.ones(shape[:-1] + (1,), jnp.float32)}
+    return {"data": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int, fp8_kv: bool = True):
+    """Paged pools mirroring the dense ``init_cache`` stack structure.
+    Only attention stacks are supported (the serving engine targets the
+    attention+MoE families; SSM/enc-dec state is not paged)."""
+    from repro.models.lm import layer_kinds
+    kinds = layer_kinds(cfg)
+    if cfg.encdec or cfg.frontend != "none" or any(
+            k in ("ssm", "hybrid") for k in kinds):
+        raise NotImplementedError(
+            "paged KV serving supports attention-only decoder stacks")
+    nd = cfg.n_dense_layers if cfg.moe else 0
+    pools = {"main_attn": {
+        "k": init_pool(cfg.n_layers - nd, n_pages, page_size, cfg.n_kv,
+                       cfg.head_dim, fp8_kv),
+        "v": init_pool(cfg.n_layers - nd, n_pages, page_size, cfg.n_kv,
+                       cfg.head_dim, fp8_kv)}}
+    if nd:
+        pools["dense_attn"] = {
+            "k": init_pool(nd, n_pages, page_size, cfg.n_kv, cfg.head_dim,
+                           fp8_kv),
+            "v": init_pool(nd, n_pages, page_size, cfg.n_kv, cfg.head_dim,
+                           fp8_kv)}
+    return pools
+
+
+def pool_nbytes(pools) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pools))
+
+
+def _quantize_rows(rows):
+    """rows (..., KV, hd) -> (payload e4m3, scale f32 (..., KV, 1)): one po2
+    scale per (token, head) — `fused_quantize` kind, i.e. folded into the
+    cache write, not a counted Fig.-2 cast."""
+    tile = (1,) * (rows.ndim - 1) + (rows.shape[-1],)
+    q = quantize(rows, tile, tag="q_kv_page", kind="fused_quantize")
+    return q.data, q.scale
+
+
+def page_write_rows(pool_l, rows, page_idx, slot_idx):
+    """Scatter token rows into ONE LAYER's pool slice.
+    pool_l: {"data": (P, ps, KV, hd) [, "scale": (P, ps, KV, 1)]}
+    rows: (N, KV, hd) values to write; page_idx, slot_idx: (N,) int32
+    (point inactive writes at SCRATCH_PAGE)."""
+    out = dict(pool_l)
+    if "scale" in pool_l:
+        data, scale = _quantize_rows(rows)
+        out["data"] = pool_l["data"].at[page_idx, slot_idx].set(data)
+        out["scale"] = pool_l["scale"].at[page_idx, slot_idx].set(scale)
+    else:
+        out["data"] = pool_l["data"].at[page_idx, slot_idx].set(
+            rows.astype(pool_l["data"].dtype))
+    return out
+
+
+def page_read(pool_l, page_tables, dtype=jnp.bfloat16):
+    """Gather a request-batch view from ONE LAYER's pool slice.
+    page_tables: (B, max_pages) int32 (unused entries -> SCRATCH_PAGE).
+    Returns (B, max_pages * page_size, KV, hd) in `dtype`; rows beyond each
+    request's length are garbage and MUST be masked by position (the
+    attention `pos` mask does this)."""
+    data = pool_l["data"][page_tables]        # (B, np, ps, KV, hd)
+    B, npg, ps, KV, hd = data.shape
+    data = data.reshape(B, npg * ps, KV, hd)
+    if "scale" in pool_l:
+        scale = pool_l["scale"][page_tables].reshape(B, npg * ps, KV, 1)
+        q = QTensor(data=data, scale=scale, tile=(1, 1, 1, hd))
+        return _dequantize_nocount(q, dtype)
+    return data.astype(dtype)

@@ -1,0 +1,173 @@
+"""Request scheduler for the continuous-batching serving engine.
+
+Policy (LightLLM/vLLM-style, sized for the paper's FP8-resident decode):
+
+  * FCFS admission — only the HEAD of the waiting queue is ever considered,
+    so an admissible request can never be overtaken (no starvation).
+  * Decode priority — one admission per engine tick (the jitted step carries
+    a single bucketed prefill); resident requests keep decoding every tick
+    and the prefill rides along in the same jitted step.
+  * Reserved-token budget — a request is admitted only while
+    sum(prompt_len + max_new_tokens) over resident requests stays within
+    ``token_budget``; the reservation covers the worst-case length, so the
+    invariant holds for the request's whole lifetime.
+  * Eviction — when the paged-KV allocator cannot extend a growing request,
+    the YOUNGEST resident request is evicted (restart semantics: its pages
+    are freed, generated tokens are discarded, and it re-queues at the front
+    of the waiting line, which preserves FCFS order).
+
+The scheduler is pure host-side bookkeeping: it never touches jax.  The
+engine owns the device arrays and the page allocator and consults the
+scheduler for admission/eviction decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.serve.paged_kv import PageAllocator
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (token ids in, sampling knobs, arrival time)."""
+    prompt: List[int]
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    temperature: float = 0.0            # <= 0 -> greedy
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+
+    @property
+    def reserved_tokens(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Lifecycle bookkeeping for an admitted request."""
+    req: Request
+    slot: int
+    pages: List[int]
+    admit_seq: int
+    admit_time: float
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    prefilled: bool = False
+    n_evictions: int = 0
+
+    @property
+    def next_pos(self) -> int:
+        """Position the next fed token's KV row is written at.  Prefill
+        fills rows [0, prompt); the first decode feeds the prefill-sampled
+        token and writes row `prompt`; each later decode advances by one."""
+        return len(self.req.prompt) + max(len(self.generated) - 1, 0)
+
+    def done(self, eos_id: Optional[int]) -> bool:
+        if len(self.generated) >= self.req.max_new_tokens:
+            return True
+        return bool(self.generated) and eos_id is not None \
+            and self.generated[-1] == eos_id
+
+
+class Scheduler:
+    """FCFS + decode-priority + reserved-token-budget admission control."""
+
+    def __init__(self, max_batch: int, token_budget: int):
+        self.max_batch = max_batch
+        self.token_budget = token_budget
+        self.waiting: deque = deque()
+        self.active: Dict[int, RequestState] = {}      # slot -> state
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+        self._admit_seq = itertools.count()
+        self.n_finished = 0
+        self.n_evictions = 0
+        self._eviction_counts: Dict[int, int] = {}     # rid -> times evicted
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def reserved_tokens(self) -> int:
+        return sum(st.req.reserved_tokens for st in self.active.values())
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def idle(self) -> bool:
+        return not self.waiting and not self.active
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    # -- admission ---------------------------------------------------------
+    def try_admit(self, allocator: PageAllocator,
+                  now: float) -> Optional[RequestState]:
+        """Admit the queue head if a slot, the token budget, and prompt pages
+        all allow it.  Returns the new RequestState (pages allocated,
+        prefill still pending) or None.  Strictly FCFS: if the head does not
+        fit, nothing behind it is considered."""
+        if not self.waiting or not self._free_slots:
+            return None
+        req = self.waiting[0]
+        if self.reserved_tokens + req.reserved_tokens > self.token_budget:
+            return None
+        pages = allocator.alloc(allocator.pages_for(len(req.prompt)))
+        if pages is None:
+            return None
+        self.waiting.popleft()
+        slot = self._free_slots.pop()
+        st = RequestState(req=req, slot=slot, pages=pages,
+                          admit_seq=next(self._admit_seq), admit_time=now,
+                          n_evictions=self._eviction_counts.get(req.rid, 0))
+        self.active[slot] = st
+        return st
+
+    # -- eviction / completion --------------------------------------------
+    def evict_youngest(self, allocator: PageAllocator,
+                       requester: Optional[RequestState] = None
+                       ) -> Optional[RequestState]:
+        """Free the youngest resident request (restart semantics) to relieve
+        page pressure; it re-queues at the FRONT of the waiting line (it was
+        admitted before anything still waiting, so FCFS order is preserved).
+
+        Seniority rule: only residents STRICTLY YOUNGER than ``requester``
+        are victims; if the requester is itself the youngest, IT is evicted.
+        The oldest resident is therefore never unseated, which guarantees
+        forward progress (no evict-each-other livelock between two growing
+        requests).  ``requester=None`` evicts the globally youngest.
+        Returns the evicted state, or None if nothing is resident."""
+        if requester is None:
+            victims = list(self.active.values())
+        else:
+            victims = [st for st in self.active.values()
+                       if st.admit_seq > requester.admit_seq] or [requester]
+        if not victims:
+            return None
+        st = max(victims, key=lambda s: s.admit_seq)
+        self._release(st, allocator)
+        st.generated.clear()           # restart: KV + tokens are recomputed
+        st.prefilled = False
+        st.n_evictions += 1
+        self.n_evictions += 1
+        self._eviction_counts[st.req.rid] = st.n_evictions
+        self.waiting.appendleft(st.req)
+        return st
+
+    def finish(self, slot: int, allocator: PageAllocator,
+               now: float) -> RequestState:
+        st = self.active[slot]
+        st.finish_time = now
+        self._release(st, allocator)
+        self.n_finished += 1
+        return st
+
+    def _release(self, st: RequestState, allocator: PageAllocator) -> None:
+        allocator.free(st.pages)
+        st.pages = []
+        del self.active[st.slot]
+        self._free_slots.append(st.slot)

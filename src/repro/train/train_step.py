@@ -57,7 +57,7 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
 
         if compress_pod_grads and plan.mesh is not None and \
                 "pod" in getattr(plan.mesh, "axis_names", ()):
-            from jax import shard_map
+            from repro.compat import shard_map
             from jax.sharding import PartitionSpec as P
             from repro.runtime.compression import compressed_psum
             # grads arrive pod-sharded (per-pod partial sums when the batch

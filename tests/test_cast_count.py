@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import casts
 from repro.core.linear import expert_ffn, quantize_entry

@@ -1,21 +1,33 @@
 """Properties of the paper's core numerics (§3.1): po2 scales, idempotence,
 double quantization error, scaling-aware transpose exactness.
 
-Hypothesis drives the shapes/value-distributions; each property is the
-formal statement of an equation in the paper:
+Hypothesis (when installed) drives the shapes/value-distributions; each
+property is the formal statement of an equation in the paper:
   Eq. 5-8  : requantization at the same layout is value-idempotent
   Eq. 9    : naive re-layout with 'linear' scales has nonzero error
   Alg. 1   : the direct transpose is exact up to subnormal underflow
+
+Without hypothesis the same properties run over a fixed seeded grid
+(`SEEDED_CASES`) so the invariants are always exercised.
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.fp8 import BLOCK, TILE, is_po2
 from repro.core.quant import (_dequantize_nocount, quantize_rowwise)
 from repro.core.transpose import (double_quant_error, transpose_direct,
                                   transpose_naive)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed; seeded fallback "
+    "tests below cover the same properties")
 
 
 def _rand_x(seed, rows, cols, spread=2.0):
@@ -25,20 +37,21 @@ def _rand_x(seed, rows, cols, spread=2.0):
                         ).astype(np.float32))
 
 
-shapes = st.sampled_from([(128, 128), (256, 128), (128, 384), (256, 256)])
+SHAPE_POOL = [(128, 128), (256, 128), (128, 384), (256, 256)]
+# fixed (seed, shape, spread) grid for the no-hypothesis fallback
+SEEDED_CASES = [(s * 7919 + 13, SHAPE_POOL[s % len(SHAPE_POOL)],
+                 0.5 + 0.7 * (s % 4)) for s in range(6)]
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), shape=shapes,
-       spread=st.floats(0.1, 3.0))
-def test_scales_are_po2(seed, shape, spread):
+# ---------------------------------------------------------------------------
+# Property implementations (shared between hypothesis and seeded drivers).
+# ---------------------------------------------------------------------------
+def check_scales_are_po2(seed, shape, spread):
     q = quantize_rowwise(_rand_x(seed, *shape, spread))
     assert bool(is_po2(q.scale).all())
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), shape=shapes)
-def test_value_idempotence(seed, shape):
+def check_value_idempotence(seed, shape):
     """Eq. 5-8: D(Q(D(Q(x)))) == D(Q(x)) exactly (po2 scales)."""
     x = _rand_x(seed, *shape)
     d1 = _dequantize_nocount(quantize_rowwise(x))
@@ -46,9 +59,7 @@ def test_value_idempotence(seed, shape):
     assert np.array_equal(np.asarray(d1), np.asarray(d2))
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), shape=shapes)
-def test_double_quant_error_po2_vs_linear(seed, shape):
+def check_double_quant_error_po2_vs_linear(seed, shape):
     """Eq. 1/9: linear scales accumulate double-quantization error; po2
     scales shrink it by orders of magnitude (only subnormal flushes left)."""
     x = _rand_x(seed, *shape)
@@ -59,10 +70,7 @@ def test_double_quant_error_po2_vs_linear(seed, shape):
         assert e_po2 < 0.05 * e_lin
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), shape=shapes,
-       spread=st.floats(0.1, 3.0))
-def test_direct_transpose_exact_up_to_underflow(seed, shape, spread):
+def check_direct_transpose_exact_up_to_underflow(seed, shape, spread):
     """Algorithm 1: dequant(T_direct(q)) equals dequant(q)^T except where the
     re-based encoding underflows; those errors are bounded by half a
     subnormal ulp at the block scale (s_max * 2^-10)."""
@@ -79,9 +87,7 @@ def test_direct_transpose_exact_up_to_underflow(seed, shape, spread):
         assert (np.abs(b)[mism] < s_up[mism] * 2.0 ** -6).all()
 
 
-@settings(max_examples=6, deadline=None)
-@given(seed=st.integers(0, 2**16))
-def test_direct_transpose_involution_values(seed):
+def check_direct_transpose_involution_values(seed):
     """T(T(q)) dequantizes to dequant(q) up to (already-flushed) underflow."""
     q = quantize_rowwise(_rand_x(seed, 128, 128))
     qtt = transpose_direct(transpose_direct(q))
@@ -91,6 +97,77 @@ def test_direct_transpose_involution_values(seed):
     assert (np.abs(a - b) <= s_up * 2.0 ** -9).all()
 
 
+# ---------------------------------------------------------------------------
+# Hypothesis drivers (richer distributions; skipped when not installed).
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    shapes = st.sampled_from(SHAPE_POOL)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), shape=shapes,
+           spread=st.floats(0.1, 3.0))
+    def test_scales_are_po2(seed, shape, spread):
+        check_scales_are_po2(seed, shape, spread)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), shape=shapes)
+    def test_value_idempotence(seed, shape):
+        check_value_idempotence(seed, shape)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), shape=shapes)
+    def test_double_quant_error_po2_vs_linear(seed, shape):
+        check_double_quant_error_po2_vs_linear(seed, shape)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), shape=shapes,
+           spread=st.floats(0.1, 3.0))
+    def test_direct_transpose_exact_up_to_underflow(seed, shape, spread):
+        check_direct_transpose_exact_up_to_underflow(seed, shape, spread)
+
+    @needs_hypothesis
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_direct_transpose_involution_values(seed):
+        check_direct_transpose_involution_values(seed)
+
+
+# ---------------------------------------------------------------------------
+# Seeded fallback drivers — always run, so the core invariants are exercised
+# on environments without hypothesis (e.g. the minimal CI image).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,shape,spread", SEEDED_CASES)
+def test_seeded_scales_are_po2(seed, shape, spread):
+    check_scales_are_po2(seed, shape, spread)
+
+
+@pytest.mark.parametrize("seed,shape,spread", SEEDED_CASES)
+def test_seeded_value_idempotence(seed, shape, spread):
+    check_value_idempotence(seed, shape)
+
+
+@pytest.mark.parametrize("seed,shape,spread", SEEDED_CASES)
+def test_seeded_double_quant_error_po2_vs_linear(seed, shape, spread):
+    check_double_quant_error_po2_vs_linear(seed, shape)
+
+
+@pytest.mark.parametrize("seed,shape,spread", SEEDED_CASES)
+def test_seeded_direct_transpose_exact(seed, shape, spread):
+    check_direct_transpose_exact_up_to_underflow(seed, shape, spread)
+
+
+@pytest.mark.parametrize("seed", [c[0] for c in SEEDED_CASES])
+def test_seeded_direct_transpose_involution(seed):
+    check_direct_transpose_involution_values(seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic end-to-end checks (never needed hypothesis).
+# ---------------------------------------------------------------------------
 def test_direct_adds_no_relayout_error():
     """The end-to-end claim, measured as ADDED error of the re-layout step
     (the first quantization's error is the recipe's baseline either way):

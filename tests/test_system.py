@@ -6,8 +6,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.moe import MoEConfig, moe_block, _dispatch_plan, _expert_plan
 from repro.core.recipes import get_recipe
