@@ -229,16 +229,7 @@ def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
 
     if name == "fp8_flow":
         qx: QTensor = x_in
-        h = _ggemm(recipe, qx, qw13, jnp.bfloat16)          # BF16 island in
-        if act == "swiglu":
-            qa = _fused_swiglu_quant(recipe, h)
-        else:
-            # fused <act>+quant: same one-pass contract as the SwiGLU kernel
-            casts.record("fused_quantize", "act_quant", h.size)
-            qa = quantize_rowwise(_act_fwd(act, h), scale_mode=recipe.scale_mode,
-                                  tag="act_quant", kind="fused_quantize_inner")
-        y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
-        h_saved = h if recipe.save_h else None
+        y, (qa, h_saved) = ffn_fwd_fp8_core(recipe, act, qx, qw13, qw2)
         wit = (jnp.zeros((0,), w13.dtype), jnp.zeros((0,), w2.dtype))
         return y, (qx, qa, h_saved, qw13, qw2, wit)
 
@@ -272,6 +263,66 @@ def _psum(v, axes):
     return jax.lax.psum(v, axes) if axes else v
 
 
+# ---------------------------------------------------------------------------
+# fp8_flow FFN core (shared by expert_ffn's VJP and the overlapped dispatch
+# pipeline in core/moe.py, which hand-writes its backward so the one explicit
+# island quantize can be hoisted OUT of the per-chunk loop).
+# ---------------------------------------------------------------------------
+def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
+                     qw2: QTensor):
+    """fp8_flow grouped FFN forward on an already-quantized input.
+    Returns (y bf16, (qa, h_saved)) — the residuals the backward core needs
+    (plus qx / the weights, which the caller already holds)."""
+    h = _ggemm(recipe, qx, qw13, jnp.bfloat16)              # BF16 island in
+    if act == "swiglu":
+        qa = _fused_swiglu_quant(recipe, h)
+    else:
+        # fused <act>+quant: same one-pass contract as the SwiGLU kernel
+        casts.record("fused_quantize", "act_quant", h.size)
+        qa = quantize_rowwise(_act_fwd(act, h), scale_mode=recipe.scale_mode,
+                              tag="act_quant", kind="fused_quantize_inner")
+    y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
+    return y, (qa, h if recipe.save_h else None)
+
+
+def ffn_bwd_fp8_core(recipe: Recipe, act: str, gx_axes: tuple, qx: QTensor,
+                     qa: QTensor, h_saved, qw13: QTensor, qw2: QTensor,
+                     qg: QTensor):
+    """fp8_flow grouped FFN backward given an ALREADY-QUANTIZED output
+    cotangent ``qg`` — the explicit BF16-island quantize happens in the
+    caller (once per step, even when the FFN itself runs per micro-chunk).
+    Returns (gx QTensor, wg13 f32, wg2 f32): the input-gradient is FP8 on
+    both branches (fused Dgrad1 epilogue, or post-psum quantize when
+    gx_axes); weight grads are UNREDUCED (the caller psums over its DP
+    axes)."""
+    # Dgrad2: FP8 x FP8, block-transposed weight (exact relabeling)
+    ga = _ggemm(recipe, qg, _block_t(qw2), jnp.bfloat16)
+    # Wgrad2 via scaling-aware DIRECT transposes — zero casts
+    wg2 = _ggemm_nt(recipe, _t_direct(recipe, qa), _t_direct(recipe, qg))
+    # BF16 island: recompute h (FP8 activation checkpointing) or reuse
+    h = h_saved if h_saved is not None else _ggemm(recipe, qx, qw13,
+                                                   jnp.bfloat16)
+    gh = _act_bwd(act, h, ga)
+    casts.record("fused_quantize", "dact_quant", gh.size)
+    qgh = quantize_rowwise(gh, scale_mode=recipe.scale_mode,
+                           tag="dact_quant", kind="fused_quantize_inner")
+    if gx_axes:
+        # TP-sharded experts: the input-gradient partial-sums over the
+        # F-shards first; the fused quantizing epilogue runs after the
+        # psum (a reduction — kept out of FP8 by design).
+        gx_f32 = _ggemm(recipe, qgh, _block_t(qw13), jnp.float32)
+        casts.record("fused_quantize", "dgrad_epilogue", gx_f32.size)
+        gx = quantize_rowwise(_psum(gx_f32, gx_axes),
+                              scale_mode=recipe.scale_mode,
+                              tag="dgrad_out", kind="fused_quantize_inner")
+    else:
+        # Dgrad1 with fused quantizing epilogue -> FP8 input-gradient
+        gx = _ggemm_quant_out(recipe, qgh, _block_t(qw13))
+    # Wgrad1, again via direct transposes
+    wg13 = _ggemm_nt(recipe, _t_direct(recipe, qx), _t_direct(recipe, qgh))
+    return gx, wg13, wg2
+
+
 def _ffn_bwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
              res, gy):
     name = recipe.name
@@ -295,31 +346,8 @@ def _ffn_bwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
         w13_dt, w2_dt = wit13.dtype, wit2.dtype
         # ---- the single explicit backward cast: BF16 island -> FP8 ----
         qg = _q_row(recipe, gy, "q_bwd_island")
-        # Dgrad2: FP8 x FP8, block-transposed weight (exact relabeling)
-        ga = _ggemm(recipe, qg, _block_t(qw2), jnp.bfloat16)
-        # Wgrad2 via scaling-aware DIRECT transposes — zero casts
-        wg2 = _ggemm_nt(recipe, _t_direct(recipe, qa), _t_direct(recipe, qg))
-        # BF16 island: recompute h (FP8 activation checkpointing) or reuse
-        h = h_saved if h_saved is not None else _ggemm(recipe, qx, qw13,
-                                                       jnp.bfloat16)
-        gh = _act_bwd(act, h, ga)
-        casts.record("fused_quantize", "dact_quant", gh.size)
-        qgh = quantize_rowwise(gh, scale_mode=recipe.scale_mode,
-                               tag="dact_quant", kind="fused_quantize_inner")
-        if gx_axes:
-            # TP-sharded experts: the input-gradient partial-sums over the
-            # F-shards first; the fused quantizing epilogue runs after the
-            # psum (a reduction — kept out of FP8 by design).
-            gx_f32 = _ggemm(recipe, qgh, _block_t(qw13), jnp.float32)
-            casts.record("fused_quantize", "dgrad_epilogue", gx_f32.size)
-            gx_q = quantize_rowwise(_psum(gx_f32, gx_axes),
-                                    scale_mode=recipe.scale_mode,
-                                    tag="dgrad_out", kind="fused_quantize_inner")
-        else:
-            # Dgrad1 with fused quantizing epilogue -> FP8 input-gradient
-            gx_q = _ggemm_quant_out(recipe, qgh, _block_t(qw13))
-        # Wgrad1, again via direct transposes
-        wg13 = _ggemm_nt(recipe, _t_direct(recipe, qx), _t_direct(recipe, qgh))
+        gx_q, wg13, wg2 = ffn_bwd_fp8_core(recipe, act, gx_axes, qx, qa,
+                                           h_saved, qw13, qw2, qg)
         return (gx_q, _psum(wg13, wg_axes).astype(w13_dt),
                 _psum(wg2, wg_axes).astype(w2_dt))
 

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core import casts
 from repro.core.fp8 import TILE
-from repro.core.linear import dequantize_exit, expert_ffn, quantize_entry
-from repro.core.quant import QTensor, _dequantize_nocount, quantize_rowwise
+from repro.core.linear import (_q_row, _quant_weights, dequantize_exit,
+                               expert_ffn, ffn_bwd_fp8_core, ffn_fwd_fp8_core,
+                               quantize_entry)
+from repro.core.quant import (QTensor, _dequantize_nocount, quantize_rowwise)
 from repro.core.recipes import Recipe
 
 
@@ -390,6 +392,13 @@ def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     row_map_exp, _ = _expert_plan(local_e, E_loc, C_dec)
     tok_of_slot = jnp.where(row_map_exp >= 0, row_map_exp // k, -1)
 
+    # real drop accounting: each assignment is local to exactly one rank, so
+    # the ones that did not get an expert slot (C_dec overflow) are the drops;
+    # summed over the EP group against the global assignment count T*k.
+    n_valid = jnp.sum((local_e >= 0).astype(jnp.float32))
+    n_kept = jnp.sum((row_map_exp >= 0).astype(jnp.float32))
+    drop_frac = jax.lax.psum(n_valid - n_kept, cfg.ep_axis) / (T * k)
+
     if recipe.is_fp8:
         # W8A8 serving path: quantize activations once; weights quantized in
         # the grouped GEMM (forward-only, no backward dataflow concerns).
@@ -414,5 +423,310 @@ def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
         y_exp.reshape(E_loc * C_dec, D).astype(jnp.float32), seg,
         num_segments=T + 1)[:T]
     y = jax.lax.psum(y, cfg.ep_axis)
-    return y.astype(x.dtype), {"aux_loss": aux,
-                               "drop_frac": jnp.float32(0.0)}
+    return y.astype(x.dtype), {"aux_loss": aux, "drop_frac": drop_frac}
+
+
+# ---------------------------------------------------------------------------
+# Overlapped EP dispatch: chunked all-to-all / expert-FFN pipeline.
+#
+# The synchronous moe_block exposes its entire dispatch+combine communication
+# on the critical path of every MoE layer.  moe_block_overlapped splits the
+# token block into n_chunks micro-chunks and software-pipelines them: chunk
+# i's dispatch all-to-all is issued BEFORE chunk i-1's grouped expert FFN, so
+# XLA's latency-hiding scheduler can run the collective concurrently with the
+# independent FFN compute (rtp-llm DeepEPLowLatencyRouter-style double
+# buffering, mapped onto shard_map + lax collectives).
+#
+# Two further changes vs the synchronous block:
+#   * the FP8 payload, its po2 scales, AND the routing metadata (local expert
+#     ids + router probs) are PACKED INTO ONE uint8 message per chunk, so the
+#     per-chunk dispatch costs 1 collective launch instead of 3;
+#   * quantization stays block-level: ONE entry quantize over the full token
+#     block (chunks slice the QTensor — row-tile scales are row-local, so no
+#     chunk boundary ever re-quantizes) and ONE backward island quantize over
+#     the full FFN-output cotangent.  The Fig.-2 cast count is therefore
+#     unchanged: still 2 explicit casts for fp8_flow at any n_chunks.
+#
+# Numerics match moe_block up to f32 accumulation order PROVIDED no capacity
+# drops occur (capacities C_send/C_exp are per-chunk, so drop SETS can differ
+# between the chunked and monolithic blocks under overflow).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Static overlap configuration threaded through models/lm.py.
+
+    n_chunks          pipeline depth per MoE layer (1 = fused-message only)
+    min_chunk_tokens  never chunk below this many local tokens per chunk
+                      (tiny chunks waste collective latency on padding)
+    """
+    n_chunks: int = 2
+    min_chunk_tokens: int = 64
+
+    def chunks_for(self, T: int) -> int:
+        cap = max(1, min(self.n_chunks, T // max(self.min_chunk_tokens, 1)))
+        return max(d for d in range(1, cap + 1) if T % d == 0)
+
+
+def _u8(x):
+    """Bitcast to uint8 and flatten the trailing byte axis: (R, ...) -> (R, w)."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return u.reshape(x.shape[0], -1)
+
+
+def _pack_dispatch_msg(d, s, se, pf):
+    """Fuse one chunk's dispatch into a single uint8 message:
+    d (R, D) e4m3 payload | s (R, D/TILE) f32 scales | se (R,) i32 local
+    expert ids | pf (R,) f32 router probs.  Width D + 4*D/TILE + 8 bytes."""
+    return jnp.concatenate(
+        [_u8(d), _u8(s), _u8(se[:, None]), _u8(pf[:, None])], axis=1)
+
+
+def _unpack_dispatch_msg(msg, D: int):
+    R = msg.shape[0]
+    Ds = D // TILE
+    d = jax.lax.bitcast_convert_type(msg[:, :D], jnp.float8_e4m3fn)
+    o = D
+    s = jax.lax.bitcast_convert_type(
+        msg[:, o:o + 4 * Ds].reshape(R, Ds, 4), jnp.float32)
+    o += 4 * Ds
+    se = jax.lax.bitcast_convert_type(
+        msg[:, o:o + 4].reshape(R, 1, 4), jnp.int32)[:, 0]
+    pf = jax.lax.bitcast_convert_type(
+        msg[:, o + 4:o + 8].reshape(R, 1, 4), jnp.float32)[:, 0]
+    return d, s, se, pf
+
+
+def _pack_bwd_msg(gd, gs, gp):
+    """Backward fused message: FP8 input-gradient payload + scales + the
+    per-row router-prob gradient ride ONE reverse collective."""
+    return jnp.concatenate([_u8(gd), _u8(gs), _u8(gp[:, None])], axis=1)
+
+
+def _unpack_bwd_msg(msg, D: int):
+    R = msg.shape[0]
+    Ds = D // TILE
+    gd = jax.lax.bitcast_convert_type(msg[:, :D], jnp.float8_e4m3fn)
+    gs = jax.lax.bitcast_convert_type(
+        msg[:, D:D + 4 * Ds].reshape(R, Ds, 4), jnp.float32)
+    gp = jax.lax.bitcast_convert_type(
+        msg[:, D + 4 * Ds:].reshape(R, 1, 4), jnp.float32)[:, 0]
+    return gd, gs, gp
+
+
+def _chunk_geometry(recipe, cfg, T: int, n: int, EP: int, E_loc: int):
+    Tc = T // n
+    k = cfg.top_k
+    C_send = _round_up(max(int(Tc * k / EP * cfg.capacity_factor), 8), 8)
+    R = EP * C_send
+    C_exp = _round_up(max(R // E_loc, 8), 128 if recipe.is_fp8 else 8)
+    return Tc, C_send, R, C_exp
+
+
+def moe_block_overlapped(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
+                         n_chunks: int = 2):
+    """Drop-in replacement for moe_block with the chunked/overlapped dispatch
+    pipeline.  Same signature + returns, plus the static n_chunks knob
+    (clamped to a divisor of the local token count)."""
+    T, D = x.shape
+    n = DispatchPlan(n_chunks=n_chunks, min_chunk_tokens=1).chunks_for(T)
+    p, ids, aux = router_topk(x, w_router, cfg.top_k)
+    if recipe.name == "fp8_flow":
+        y, drop = _overlap_core_flow(recipe, cfg, n, x, p, ids, w13, w2)
+    else:
+        y, drop = _overlap_chunks_autodiff(recipe, cfg, n, x, p, ids, w13, w2)
+    return y, {"aux_loss": aux, "drop_frac": drop}
+
+
+def _overlap_chunks_autodiff(recipe, cfg, n, x, p, ids, w13, w2):
+    """bf16 / blockwise / naive_fp8: chunked pipeline built from the existing
+    autodiff'd primitives.  Chunks are issued back-to-back so independent
+    chunks can overlap, but each keeps its recipe's Q/DQ-at-the-boundary
+    structure (the fused-message + hoisted-cast pipeline is fp8_flow-only:
+    for the baselines, per-chunk casts ARE the cost the paper counts)."""
+    T, D = x.shape
+    EP = compat.axis_size(cfg.ep_axis)
+    E_loc = cfg.n_experts // EP
+    k = cfg.top_k
+    Tc, C_send, R, C_exp = _chunk_geometry(recipe, cfg, T, n, EP, E_loc)
+    ys, drops = [], []
+    for c in range(n):
+        xc = jax.lax.slice_in_dim(x, c * Tc, (c + 1) * Tc)
+        pc = jax.lax.slice_in_dim(p, c * Tc, (c + 1) * Tc)
+        idc = jax.lax.slice_in_dim(ids, c * Tc, (c + 1) * Tc)
+        rms, se, sa, dc = _dispatch_plan(idc, k, EP, E_loc, C_send)
+        if recipe.name == "naive_fp8":
+            recv_in = fp8_dispatch_naive(recipe, xc, rms, Tc, cfg.ep_axis)
+        else:
+            recv_in = _a2a(_take_rows(xc.astype(jnp.bfloat16), rms),
+                           cfg.ep_axis)
+        recv_expert = _a2a(se, cfg.ep_axis)
+        pf = jnp.where(sa >= 0, pc.reshape(-1)[jnp.maximum(sa, 0)], 0.0)
+        recv_p = _a2a(pf, cfg.ep_axis)
+        rme, ret = _expert_plan(recv_expert, E_loc, C_exp)
+        x_exp = _take_rows(recv_in, rme).reshape(E_loc, C_exp, D)
+        y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (), x_exp, w13, w2)
+        p_exp = _take_rows(recv_p[:, None], rme).reshape(E_loc, C_exp)
+        y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
+        y_ret = _take_rows(y_exp.reshape(E_loc * C_exp, D), ret)
+        y_back = _a2a(y_ret, cfg.ep_axis)
+        seg = jnp.where(rms >= 0, rms, Tc)
+        ys.append(jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
+                                      num_segments=Tc + 1)[:Tc])
+        drops.append(dc)
+    y = jnp.concatenate(ys, axis=0).astype(x.dtype)
+    return y, jnp.mean(jnp.stack(drops))
+
+
+def _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2):
+    T, D = x.shape
+    EP = compat.axis_size(cfg.ep_axis)
+    E_loc = cfg.n_experts // EP
+    assert E_loc * EP == cfg.n_experts, (cfg.n_experts, EP)
+    k = cfg.top_k
+    Tc, C_send, R, C_exp = _chunk_geometry(recipe, cfg, T, n, EP, E_loc)
+
+    qw13, qw2 = _quant_weights(recipe, w13, w2)
+
+    # ONE entry quantize for the WHOLE block (the counted forward cast);
+    # chunks slice the QTensor — row-tile scales are row-local, so chunk
+    # boundaries never re-quantize.
+    q = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
+
+    plans = [_dispatch_plan(jax.lax.slice_in_dim(ids, c * Tc, (c + 1) * Tc),
+                            k, EP, E_loc, C_send) for c in range(n)]
+
+    def issue_dispatch(c):
+        rms, se, sa, _ = plans[c]
+        gmap = jnp.where(rms >= 0, rms + c * Tc, -1)
+        d, s = _permute_pad_fields(q.data, q.scale, gmap, recipe.use_pallas)
+        pc = jax.lax.slice_in_dim(p, c * Tc, (c + 1) * Tc)
+        pf = jnp.where(sa >= 0, pc.reshape(-1)[jnp.maximum(sa, 0)], 0.0)
+        return _a2a(_pack_dispatch_msg(d, s, se, pf), cfg.ep_axis)
+
+    recv = issue_dispatch(0)
+    ys, saved = [], []
+    for c in range(n):
+        # double buffer: chunk c+1's fused dispatch is ON THE WIRE while
+        # chunk c runs its grouped FFN + combine below
+        nxt = issue_dispatch(c + 1) if c + 1 < n else None
+        d_r, s_r, e_r, p_r = _unpack_dispatch_msg(recv, D)
+        rme, ret = _expert_plan(e_r, E_loc, C_exp)
+        d_e, s_e = _permute_pad_fields(d_r, s_r, rme, recipe.use_pallas)
+        qx_c = QTensor(d_e.reshape(E_loc, C_exp, D),
+                       s_e.reshape(E_loc, C_exp, D // TILE), (1, 1, TILE))
+        y_exp, (qa_c, h_c) = ffn_fwd_fp8_core(recipe, cfg.act, qx_c, qw13, qw2)
+        p_exp = _take_rows(p_r[:, None], rme).reshape(E_loc, C_exp)
+        y_w = y_exp * p_exp[..., None].astype(y_exp.dtype)
+        y_ret = _take_rows(y_w.reshape(E_loc * C_exp, D), ret)
+        y_back = _a2a(y_ret, cfg.ep_axis)        # overlaps chunk c+1's FFN
+        rms = plans[c][0]
+        seg = jnp.where(rms >= 0, rms, Tc)
+        ys.append(jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
+                                      num_segments=Tc + 1)[:Tc])
+        saved.append((rms, plans[c][2], rme, ret, qx_c, qa_c, h_c, p_exp,
+                      y_exp))
+        recv = nxt
+    y = jnp.concatenate(ys, axis=0).astype(x.dtype)
+    drop = jnp.mean(jnp.stack([pl[3] for pl in plans]))
+    wit = (jnp.zeros((0,), x.dtype), jnp.zeros((0,), w13.dtype),
+           jnp.zeros((0,), w2.dtype))
+    return (y, drop), (tuple(saved), qw13, qw2, wit)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _overlap_core_flow(recipe: Recipe, cfg: MoEConfig, n: int, x, p, ids,
+                       w13, w2):
+    """fp8_flow overlapped core with a HAND-WRITTEN backward pipeline that
+    mirrors the forward: chunked reverse combine (bf16), ONE hoisted island
+    quantize, then per-chunk FFN backward with the FP8 input-gradient +
+    prob-gradient riding one fused reverse collective per chunk."""
+    (y, drop), _ = _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2)
+    return y, drop
+
+
+def _ocf_fwd(recipe, cfg, n, x, p, ids, w13, w2):
+    return _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2)
+
+
+def _ocf_bwd(recipe, cfg, n, res, ct):
+    g_y, _g_drop = ct
+    saved, qw13, qw2, (wx, wit13, wit2) = res
+    T, D = g_y.shape
+    Tc = T // n
+    k = cfg.top_k
+    E_loc, C_exp, _ = saved[0][4].data.shape
+    S = E_loc * C_exp
+
+    # ---- stage 1: per-chunk reverse combine (bf16 collectives pipeline) ----
+    g_yexp, g_pexp = [], []
+    for c in range(n):
+        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp = saved[c]
+        g_c = jax.lax.slice_in_dim(g_y, c * Tc, (c + 1) * Tc)
+        g_back = _take_rows(g_c.astype(jnp.float32), rms)     # (R, D)
+        g_ret = _a2a(g_back.astype(jnp.bfloat16), cfg.ep_axis)
+        g_yw = _take_rows(g_ret, rme).reshape(E_loc, C_exp, D)
+        g_yexp.append(g_yw * p_exp[..., None].astype(g_yw.dtype))
+        g_pexp.append(jnp.sum(g_yw.astype(jnp.float32)
+                              * y_exp.astype(jnp.float32), axis=-1))
+
+    # ---- the ONE explicit backward cast (BF16 island -> FP8), hoisted out
+    # of the chunk loop: quantize(concat) == concat(quantize) for row tiles,
+    # so no chunk boundary re-quantizes and the Fig.-2 count stays at 2.
+    qg_all = _q_row(recipe, jnp.concatenate(g_yexp, axis=1), "q_bwd_island")
+
+    # ---- stage 2: per-chunk FFN backward + fused reverse dispatch,
+    # software-pipelined (chunk c's reverse a2a flies while chunk c+1's FFN
+    # backward computes; its unpack + segment-sums happen one step later).
+    wg13 = jnp.zeros((), jnp.float32)
+    wg2 = jnp.zeros((), jnp.float32)
+    gx_chunks = [None] * n
+    gp_chunks = [None] * n
+
+    def land(c, msg):
+        rms, sa = saved[c][0], saved[c][1]
+        gd, gs, gp = _unpack_bwd_msg(msg, D)
+        casts.record("fused_dequantize", "dispatch_bwd", gd.size)
+        g_rows = _dequantize_nocount(QTensor(gd, gs, (1, TILE)), jnp.bfloat16)
+        seg = jnp.where(rms >= 0, rms, Tc)
+        gx_chunks[c] = jax.ops.segment_sum(
+            g_rows.astype(jnp.float32), seg,
+            num_segments=Tc + 1)[:Tc].astype(wx.dtype)
+        segp = jnp.where(sa >= 0, sa, Tc * k)
+        gp_chunks[c] = jax.ops.segment_sum(
+            gp.astype(jnp.float32), segp,
+            num_segments=Tc * k + 1)[:Tc * k].reshape(Tc, k)
+
+    pending = None
+    for c in range(n):
+        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp = saved[c]
+        qg_c = QTensor(
+            jax.lax.slice_in_dim(qg_all.data, c * C_exp, (c + 1) * C_exp,
+                                 axis=1),
+            jax.lax.slice_in_dim(qg_all.scale, c * C_exp, (c + 1) * C_exp,
+                                 axis=1), qg_all.tile)
+        gxq, wg13_c, wg2_c = ffn_bwd_fp8_core(recipe, cfg.act, (), qx_c, qa_c,
+                                              h_c, qw13, qw2, qg_c)
+        wg13 = wg13 + wg13_c
+        wg2 = wg2 + wg2_c
+        # inverse expert-grouping permute (FP8-exact), then ONE fused reverse
+        # collective: e4m3 payload + po2 scales + router-prob grads together
+        gd, gs = _permute_pad_fields(gxq.data.reshape(S, D),
+                                     gxq.scale.reshape(S, D // TILE), ret,
+                                     recipe.use_pallas)
+        gp_r = _take_rows(g_pexp[c].reshape(S, 1), ret)[:, 0]
+        msg = _a2a(_pack_bwd_msg(gd, gs, gp_r), cfg.ep_axis)
+        if pending is not None:
+            land(*pending)
+        pending = (c, msg)
+    land(*pending)
+
+    g_x = jnp.concatenate(gx_chunks, axis=0)
+    g_p = jnp.concatenate(gp_chunks, axis=0)
+    wg_axes = cfg.dp_axes
+    if wg_axes:
+        wg13 = jax.lax.psum(wg13, wg_axes)
+        wg2 = jax.lax.psum(wg2, wg_axes)
+    return (g_x, g_p, None, wg13.astype(wit13.dtype), wg2.astype(wit2.dtype))
+
+
+_overlap_core_flow.defvjp(_ocf_fwd, _ocf_bwd)

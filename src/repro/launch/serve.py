@@ -36,6 +36,8 @@ def main():
     ap.add_argument("--n-pages", type=int, default=128)
     ap.add_argument("--max-pages", type=int, default=8)
     ap.add_argument("--token-budget", type=int, default=512)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: max prompt tokens per tick")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--bf16-kv", action="store_true")
     ap.add_argument("--no-w8", action="store_true")
@@ -59,6 +61,7 @@ def main():
         max_batch=args.max_batch, page_size=args.page_size,
         n_pages=args.n_pages, max_pages_per_req=args.max_pages,
         token_budget=args.token_budget, prefill_buckets=(16, 32, 64),
+        prefill_chunk=args.prefill_chunk,
         fp8_kv=fp8 and not args.bf16_kv,
         w8_weights=fp8 and not args.no_w8, seed=args.seed)
     engine = ServeEngine(cfg, recipe, plan, params, ecfg)

@@ -20,7 +20,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.linear import dense_mlp, expert_ffn, quantize_entry
-from repro.core.moe import (MoEConfig, moe_block, moe_block_decode,
+from repro.core.moe import (DispatchPlan, MoEConfig, moe_block,
+                            moe_block_decode, moe_block_overlapped,
                             moe_block_tp)
 from repro.core.recipes import Recipe
 from repro.models.layers import apply_norm, attn_block
@@ -41,7 +42,14 @@ class ParallelPlan:
                                    # activation psum volume > weight traffic
     moe_tp_combine: str = "local_first"  # TP-MoE combine ordering (§Perf):
                                    # 'psum_first' | 'local_first' |
-                                   # 'reduce_scatter' 
+                                   # 'reduce_scatter'
+    moe_overlap: Optional[DispatchPlan] = None  # chunked/overlapped EP
+                                   # dispatch pipeline (core/moe.py): when
+                                   # set, train/prefill EP MoE layers run
+                                   # moe_block_overlapped and the shared
+                                   # expert is issued BEFORE the dispatch so
+                                   # its GEMMs overlap the first chunk's
+                                   # fused all-to-all
 
     @property
     def token_axes_moe(self):      # EP: tokens also sharded over tp (SP)
@@ -313,7 +321,12 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
             E_l, Dl, gl, Fl = we13_l.shape
             we13_r = we13_l.reshape(E_l, Dl, gl * Fl)
         if mode == "ep":
-            y, m = moe_block(recipe, mcfg, xf, wr_l, we13_r, we2_l)
+            if plan.moe_overlap is not None:
+                y, m = moe_block_overlapped(
+                    recipe, mcfg, xf, wr_l, we13_r, we2_l,
+                    n_chunks=plan.moe_overlap.chunks_for(xf.shape[0]))
+            else:
+                y, m = moe_block(recipe, mcfg, xf, wr_l, we13_r, we2_l)
         elif mode == "tp":
             y, m = moe_block_tp(recipe, mcfg, xf, wr_l, we13_r, we2_l,
                                 tp_axis=plan.tp_axis,
@@ -380,15 +393,29 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
                    in_specs=(P(dp3, seq3, None), P(None, None),
                              we13_spec, we2_spec),
                    out_specs=(P(dp3, out_seq3, None), P(all_axes)))
+
+    # Overlap lever (§dispatch pipeline): with moe_overlap set, the shared
+    # expert — which depends only on x, never on the dispatch — is ISSUED
+    # BEFORE the MoE shard_map, so its dense GEMMs are ready to run while the
+    # first chunk's fused dispatch all-to-all is on the wire.  Without the
+    # overlap plan it stays after the MoE (the historical ordering).
+    shared_out = None
+    if (cfg.n_shared_experts and not decode
+            and plan.moe_overlap is not None and mode == "ep"):
+        shared_out = _mlp_stage(cfg, recipe, plan,
+                                {"w13": p["ws13"], "w2": p["ws2"]}, x)
+
     y, aux = sm(x, wr, we13, we2)
     aux = jnp.mean(aux)
 
     if cfg.n_shared_experts:
-        shared = {"w13": p["ws13"], "w2": p["ws2"]}
-        if decode:
-            y = y + _mlp_decode(cfg, shared, x)
+        if shared_out is not None:
+            y = y + shared_out
+        elif decode:
+            y = y + _mlp_decode(cfg, {"w13": p["ws13"], "w2": p["ws2"]}, x)
         else:
-            y = y + _mlp_stage(cfg, recipe, plan, shared, x)
+            y = y + _mlp_stage(cfg, recipe, plan,
+                               {"w13": p["ws13"], "w2": p["ws2"]}, x)
     return y, aux
 
 
@@ -855,14 +882,18 @@ def decode_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
 # ---------------------------------------------------------------------------
 def _run_paged_stack(cfg, recipe, plan, stack_params, stack_kinds, moe, x,
                      pool, positions, page_idx, slot_idx, *, decode,
-                     page_tables=None, pos=None):
+                     page_tables=None, pos=None, history=False):
     """Scan a layer stack against its paged K/V pools.
 
     pool: {"k": {"data" (n,P,ps,KV,hd) [, "scale"]}, "v": {...}}.
     page_idx/slot_idx: (N,) write coordinates for this step's rows (scratch
     page 0 for masked rows).  decode=True reads the paged history through
     `page_tables` and masks by per-request `pos`; decode=False (prefill) runs
-    causal flash attention over the in-flight chunk (nothing precedes it).
+    causal flash attention over the in-flight chunk — with history=True
+    (a chunked-prefill CONTINUATION) the chunk's queries additionally attend
+    to the previously prefilled rows, read back through `page_tables` after
+    this chunk's rows are written (absolute-position causal masking keeps
+    unwritten/scratch rows out of every receptive field).
     Returns (x, new_pool)."""
     from repro.models.layers import flash_attention, project_qkv
     from repro.serve.paged_kv import page_read, page_write_rows
@@ -892,6 +923,20 @@ def _run_paged_stack(cfg, recipe, plan, stack_params, stack_kinds, moe, x,
                 o = decode_attention(q, kd.astype(q.dtype),
                                      vd.astype(q.dtype), pos=pos,
                                      window=window, softcap=cfg.attn_softcap)
+            elif history:
+                # chunked-prefill continuation: attend over the request's
+                # full paged history (this chunk's rows included — they were
+                # just written above) with absolute-position causal masking
+                kd = page_read(kc, page_tables, jnp.bfloat16)
+                vd = page_read(vc, page_tables, jnp.bfloat16)
+                Skv = kd.shape[1]
+                bk = next(b for b in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                          if Skv % b == 0)
+                o = flash_attention(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                                    q_pos=positions,
+                                    kv_pos=jnp.arange(Skv, dtype=jnp.int32),
+                                    causal=True, window=window,
+                                    softcap=cfg.attn_softcap, block_k=bk)
             else:
                 o = flash_attention(q, k, v, q_pos=positions,
                                     kv_pos=positions, causal=True,
@@ -967,31 +1012,41 @@ def paged_decode_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
 
 
 def paged_prefill(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
-                  params, pools, page_table_row, tokens, length):
+                  params, pools, page_table_row, tokens, length,
+                  start=None, history: bool = False):
     """Prefill ONE request's prompt chunk into its pages.
 
     tokens (1, S) int32, right-padded to the static bucket S (a power of two
-    so flash blocking divides); length: scalar int32 true prompt length;
-    page_table_row (max_pages,) int32.  Rows >= length land on the scratch
-    page; causal masking keeps them out of every valid query's receptive
-    field.  Returns (logits (1, 1, V) at position length-1, new_pools)."""
+    so flash blocking divides); length: scalar int32 valid token count IN
+    THIS CHUNK; page_table_row (max_pages,) int32.  Rows >= length land on
+    the scratch page; causal masking keeps them out of every valid query's
+    receptive field.
+
+    Chunked prefill: `start` (scalar int32, default 0) offsets this chunk
+    inside the prompt — positions/RoPE/page coordinates are absolute — and
+    history=True (static) makes the chunk's queries attend to the previously
+    prefilled rows [0, start) through the page table.  Returns
+    (logits (1, 1, V) at absolute position start+length-1, new_pools)."""
     kinds, nd = _paged_stacks(cfg)
     x = _embed_tokens(cfg, params, tokens)
     S = x.shape[1]
-    positions = jnp.arange(S, dtype=jnp.int32)
+    rel = jnp.arange(S, dtype=jnp.int32)
+    start = jnp.int32(0) if start is None else jnp.asarray(start, jnp.int32)
+    positions = start + rel
     ps = pools["main_attn"]["k"]["data"].shape[2]
-    page_idx = jnp.where(positions < length, page_table_row[positions // ps],
-                         0)
+    page_idx = jnp.where(rel < length, page_table_row[positions // ps], 0)
     slot_idx = positions % ps
 
     new_pools = dict(pools)
     if nd:
         x, new_pools["dense_attn"] = _run_paged_stack(
             cfg, recipe, plan, params["dense_layers"], kinds[:nd], False, x,
-            pools["dense_attn"], positions, page_idx, slot_idx, decode=False)
+            pools["dense_attn"], positions, page_idx, slot_idx, decode=False,
+            page_tables=page_table_row[None], history=history)
     x, new_pools["main_attn"] = _run_paged_stack(
         cfg, recipe, plan, params["layers"], kinds[nd:], cfg.moe, x,
-        pools["main_attn"], positions, page_idx, slot_idx, decode=False)
+        pools["main_attn"], positions, page_idx, slot_idx, decode=False,
+        page_tables=page_table_row[None], history=history)
 
     x = apply_norm(cfg.norm, x, {"final_norm_s": params["final_norm_s"],
                                  "final_norm_b": params.get("final_norm_b")},

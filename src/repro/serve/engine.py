@@ -15,10 +15,19 @@ One engine *tick* = one call into a single jitted step function:
       + [decode every resident request one token]       (if any resident)
       + [sample (greedy / temperature+top-k)]
 
-All shapes are STATIC per (bucket, any_decode): decode always runs over the
-full `max_batch` slot array behind an `active` mask, and prompts are padded
-to a power-of-two bucket — so XLA compiles |buckets|+2 programs total and
-never recompiles as the batch mix changes (requests arrive/finish/evict).
+All shapes are STATIC per (bucket, any_decode, history): decode always runs
+over the full `max_batch` slot array behind an `active` mask, and prompts
+are padded to a power-of-two bucket — so XLA compiles O(|buckets|) programs
+total and never recompiles as the batch mix changes (requests
+arrive/finish/evict).
+
+Chunked prefill (``prefill_chunk``): long prompts are sliced into bounded
+token chunks, one chunk per tick, each writing its pages at an absolute
+``start`` offset and (for continuations) attending to the already-prefilled
+history through the page table.  Residents keep decoding every tick, so
+decode latency under mixed load is bounded by ONE chunk's compute instead of
+a whole long prompt; the continuation has strict FCFS priority over new
+admissions.
 
 Scheduling is FCFS with decode priority and a reserved-token budget
 (serve/scheduler.py); KV pages come from a host-side free-list with
@@ -54,6 +63,12 @@ class ServeConfig:
     max_pages_per_req: int = 16        # page-table width
     token_budget: int = 2048           # sum(prompt+max_new) over residents
     prefill_buckets: Sequence[int] = (16, 32, 64, 128)
+    prefill_chunk: Optional[int] = None  # chunked prefill: max prompt tokens
+                                       # per tick (None = whole prompt in one
+                                       # tick).  Bounds how long residents'
+                                       # decodes can stall behind a long
+                                       # prompt; prompts may then exceed the
+                                       # largest bucket (chunks must fit it)
     fp8_kv: bool = True                # e4m3 pages w/ po2 scales, else bf16
     w8_weights: bool = False           # pre-quantize expert weights (fp8_flow)
     top_k: int = 0                     # 0 -> full-vocab sampling
@@ -79,18 +94,23 @@ def sample_tokens(logits, key, temps, top_k: int):
 
 def make_engine_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                      ecfg: ServeConfig):
-    """The one jitted step: optional bucketed prefill + masked full-batch
-    decode + sampling.  `bucket`/`any_decode` are static."""
+    """The one jitted step: optional bucketed prefill chunk + masked
+    full-batch decode + sampling.  `bucket`/`any_decode`/`history` are
+    static; `history` marks a chunked-prefill CONTINUATION (the chunk's
+    queries attend to the already-prefilled pages at absolute offset
+    `pf_start`)."""
 
-    @partial(jax.jit, static_argnames=("bucket", "any_decode"),
+    @partial(jax.jit, static_argnames=("bucket", "any_decode", "history"),
              donate_argnums=(1,))
     def engine_step(params, pools, page_tables, last_tok, pos, active, temps,
-                    pf_tokens, pf_len, pf_ptrow, pf_temp, key, *,
-                    bucket: Optional[int], any_decode: bool):
+                    pf_tokens, pf_len, pf_ptrow, pf_start, pf_temp, key, *,
+                    bucket: Optional[int], any_decode: bool,
+                    history: bool = False):
         out = {}
         if bucket is not None:
             lg, pools = paged_prefill(cfg, recipe, plan, params, pools,
-                                      pf_ptrow, pf_tokens, pf_len)
+                                      pf_ptrow, pf_tokens, pf_len,
+                                      start=pf_start, history=history)
             out["prefill_tok"] = sample_tokens(
                 lg[:, -1, :], jax.random.fold_in(key, 0), pf_temp[None],
                 ecfg.top_k)[0]
@@ -117,6 +137,12 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                  params, ecfg: ServeConfig = ServeConfig()):
         self.cfg, self.recipe, self.plan, self.ecfg = cfg, recipe, plan, ecfg
+        if ecfg.prefill_chunk is not None and (
+                ecfg.prefill_chunk < 1
+                or ecfg.prefill_chunk > max(ecfg.prefill_buckets)):
+            raise ValueError(
+                f"prefill_chunk {ecfg.prefill_chunk} must be in "
+                f"[1, {max(ecfg.prefill_buckets)}] (largest bucket)")
         if ecfg.w8_weights and recipe.name == "fp8_flow":
             from repro.serve.w8 import quantize_params_for_serving
             params = quantize_params_for_serving(params)
@@ -137,9 +163,10 @@ class ServeEngine:
         P = len(req.prompt)
         if P < 1 or req.max_new_tokens < 1:
             raise ValueError("empty prompt / zero max_new_tokens")
-        if P > max(ecfg.prefill_buckets):
+        if ecfg.prefill_chunk is None and P > max(ecfg.prefill_buckets):
             raise ValueError(f"prompt {P} exceeds the largest prefill "
-                             f"bucket {max(ecfg.prefill_buckets)}")
+                             f"bucket {max(ecfg.prefill_buckets)} "
+                             f"(set prefill_chunk to slice long prompts)")
         if P + req.max_new_tokens > ecfg.max_len:
             raise ValueError(f"request needs {P + req.max_new_tokens} "
                              f"tokens > max_len {ecfg.max_len}")
@@ -180,9 +207,14 @@ class ServeEngine:
         decode_slots = [s for s in sorted(sched.active)
                         if sched.active[s].prefilled]
 
-        # decode-priority admission: at most one prefill rides this tick
-        adm = sched.try_admit(self.alloc, now)
-        if adm is None and not decode_slots:
+        # decode-priority prefill work: at most one prefill CHUNK rides this
+        # tick.  An in-flight chunked prefill continues before anything new
+        # is admitted (it was admitted first — FCFS), so decode is never
+        # starved by more than one bounded chunk per tick.
+        pf = sched.mid_prefill()
+        if pf is None:
+            pf = sched.try_admit(self.alloc, now)
+        if pf is None and not decode_slots:
             return False
 
         B, mp = ecfg.max_batch, ecfg.max_pages_per_req
@@ -200,18 +232,29 @@ class ServeEngine:
             temps[s] = st.req.temperature
 
         bucket = None
+        history = False
+        chunk = 0
+        final_chunk = False
         pf_tokens = np.zeros((1, 1), np.int32)
         pf_len = np.int32(0)
         pf_ptrow = np.zeros((mp,), np.int32)
+        pf_start = np.int32(0)
         pf_temp = np.float32(0.0)
-        if adm is not None:
-            P = len(adm.req.prompt)
-            bucket = min(b for b in ecfg.prefill_buckets if b >= P)
+        if pf is not None:
+            P = len(pf.req.prompt)
+            chunk = P - pf.prefill_pos
+            if ecfg.prefill_chunk:
+                chunk = min(chunk, ecfg.prefill_chunk)
+            final_chunk = pf.prefill_pos + chunk >= P
+            bucket = min(b for b in ecfg.prefill_buckets if b >= chunk)
             pf_tokens = np.zeros((1, bucket), np.int32)
-            pf_tokens[0, :P] = adm.req.prompt
-            pf_len = np.int32(P)
-            pf_ptrow[:len(adm.pages)] = adm.pages
-            pf_temp = np.float32(adm.req.temperature)
+            pf_tokens[0, :chunk] = pf.req.prompt[
+                pf.prefill_pos:pf.prefill_pos + chunk]
+            pf_len = np.int32(chunk)
+            pf_start = np.int32(pf.prefill_pos)
+            history = pf.prefill_pos > 0
+            pf_ptrow[:len(pf.pages)] = pf.pages
+            pf_temp = np.float32(pf.req.temperature)
 
         key = jax.random.fold_in(self._key, self._tick_count)
         ctx = self.plan.mesh if self.plan.mesh is not None \
@@ -221,14 +264,19 @@ class ServeEngine:
                 self.params, self.pools, jnp.asarray(pt), jnp.asarray(last),
                 jnp.asarray(pos), jnp.asarray(active), jnp.asarray(temps),
                 jnp.asarray(pf_tokens), pf_len, jnp.asarray(pf_ptrow),
-                pf_temp, key, bucket=bucket, any_decode=bool(decode_slots))
+                pf_start, pf_temp, key, bucket=bucket,
+                any_decode=bool(decode_slots), history=history)
         out = jax.device_get(out)
         self._tick_count += 1
         self.max_concurrent = max(self.max_concurrent,
-                                  len(decode_slots) + (adm is not None))
+                                  len(decode_slots) + (pf is not None))
 
-        if adm is not None:
-            self._emit(adm, int(out["prefill_tok"]), now, results)
+        if pf is not None:
+            pf.prefill_pos += chunk
+            if final_chunk:
+                # only the last chunk's logits are meaningful (the prompt's
+                # final position) — intermediate chunks just fill pages
+                self._emit(pf, int(out["prefill_tok"]), now, results)
         if decode_slots:
             toks = out["decode_toks"]
             for s in decode_slots:

@@ -15,6 +15,11 @@ Policy (LightLLM/vLLM-style, sized for the paper's FP8-resident decode):
     the YOUNGEST resident request is evicted (restart semantics: its pages
     are freed, generated tokens are discarded, and it re-queues at the front
     of the waiting line, which preserves FCFS order).
+  * Chunked prefill — long prompts prefill in bounded token slices
+    (``ServeConfig.prefill_chunk``), one slice per tick, so resident decodes
+    are never starved behind a long monolithic prefill.  The in-flight
+    continuation has strict priority over new admissions (it was admitted
+    first — FCFS), so at most one request is ever mid-prefill.
 
 The scheduler is pure host-side bookkeeping: it never touches jax.  The
 engine owns the device arrays and the page allocator and consults the
@@ -58,6 +63,9 @@ class RequestState:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     prefilled: bool = False
+    prefill_pos: int = 0           # tokens prefilled so far (chunked prefill:
+                                   # advances one bounded slice per tick;
+                                   # == len(prompt) once prefill is complete)
     n_evictions: int = 0
 
     @property
@@ -99,6 +107,16 @@ class Scheduler:
 
     def idle(self) -> bool:
         return not self.waiting and not self.active
+
+    def mid_prefill(self) -> Optional[RequestState]:
+        """The resident whose chunked prefill is still in flight, if any.
+        At most one exists: the engine blocks new admissions while a
+        continuation is pending (FCFS — it was admitted first)."""
+        for slot in sorted(self.active):
+            st = self.active[slot]
+            if st.prefill_pos < len(st.req.prompt):
+                return st
+        return None
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -152,6 +170,7 @@ class Scheduler:
         self._release(st, allocator)
         st.generated.clear()           # restart: KV + tokens are recomputed
         st.prefilled = False
+        st.prefill_pos = 0             # chunked-prefill progress is discarded
         st.n_evictions += 1
         self.n_evictions += 1
         self._eviction_counts[st.req.rid] = st.n_evictions

@@ -1,7 +1,10 @@
-"""The jitted serving step: one decode token against a resident KV/SSM cache
-(continuous-batching style: `pos` is per-request; this reference serve step
-uses a shared position for the dry-run shapes, which model fixed-phase
-decode benches)."""
+"""The jitted serving step: one decode token against a resident KV/SSM cache.
+
+Unified with the continuous-batching engine: sampling routes through
+``engine.sample_tokens`` (greedy where temp <= 0, else temperature + optional
+top-k — identical semantics to the engine's decode lane) and ``pos`` is
+honored per request: pass a scalar for the fixed-phase bench path or a (B,)
+vector for continuous-batching shapes (each request at its own depth)."""
 from __future__ import annotations
 
 import jax
@@ -12,11 +15,29 @@ from repro.core.recipes import Recipe
 from repro.models.lm import ParallelPlan, decode_step, init_cache
 
 
-def make_serve_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan):
-    def serve_step(params, cache, tokens, pos):
+def make_serve_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                    top_k: int = 0):
+    """Returns serve_step(params, cache, tokens, pos[, temps, key]).
+
+    tokens: (B, 1) int32; pos: scalar int32 OR (B,) int32 per-request
+    positions; temps: optional (B,) f32 sampling temperatures (None/<=0 ->
+    greedy, matching the engine); key: PRNG key for the stochastic path.
+    Returns (next_tok (B, 1) int32, new_cache)."""
+    from repro.serve.engine import sample_tokens
+
+    def serve_step(params, cache, tokens, pos, temps=None, key=None):
+        if temps is not None and key is None:
+            # a fixed default key would make every step's categorical draw
+            # perfectly correlated — degenerate "temperature" sampling
+            raise ValueError("stochastic sampling (temps) needs a per-step "
+                             "PRNG key; thread a split key through the loop")
         logits, new_cache = decode_step(cfg, recipe, plan, params, cache,
                                         tokens, pos)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        B = tokens.shape[0]
+        if temps is None:
+            temps = jnp.zeros((B,), jnp.float32)
+            key = jax.random.key(0)            # unused: every row is greedy
+        next_tok = sample_tokens(logits[:, -1, :], key, temps, top_k)
         return next_tok[:, None], new_cache
 
     return serve_step
