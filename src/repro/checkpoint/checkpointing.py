@@ -110,8 +110,11 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
     assert manifest["n_leaves"] == len(leaves_like), "tree structure changed"
     import ml_dtypes  # noqa: F401 — registers bf16/fp8 numpy dtypes
     new_leaves = []
-    shard_leaves = jax.tree.flatten(shardings)[0] if shardings is not None \
-        else [None] * len(leaves_like)
+    # None leaves mean "leave placement alone" — keep them as leaves so a
+    # partially-specified shardings tree stays aligned with the state tree
+    shard_leaves = jax.tree.flatten(
+        shardings, is_leaf=lambda x: x is None)[0] \
+        if shardings is not None else [None] * len(leaves_like)
     for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
         dtype = np.dtype(manifest["dtypes"][i])
         shape = tuple(manifest["shapes"][i])

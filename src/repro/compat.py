@@ -18,7 +18,15 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "pvary", "make_mesh", "axis_size"]
+__all__ = ["shard_map", "pvary", "make_mesh", "axis_size", "set_mesh"]
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh):
+        # on 0.4.x the Mesh object IS the context manager
+        return mesh
 
 
 if hasattr(jax, "shard_map"):

@@ -45,7 +45,11 @@ def po2_scale(amax: jnp.ndarray, fmt_max: float = E4M3_MAX) -> jnp.ndarray:
     exp = jnp.ceil(jnp.log2(safe / fmt_max))
     # clamp so 2**exp stays finite in f32 and representable as a scale
     exp = jnp.clip(exp, -126.0, 126.0)
-    s = jnp.exp2(exp)
+    # ldexp, NOT exp2: XLA's f32 exp2 is not correctly rounded for
+    # |exp| >= 13, so the "scale is an exact power of two" contract (the
+    # enabler for the scaling-aware transpose AND the int8 exponent wire of
+    # repro.dist) would silently break at large/small amax
+    s = jnp.ldexp(jnp.float32(1.0), exp.astype(jnp.int32))
     return jnp.where(amax > 0, s, jnp.float32(1.0))
 
 

@@ -210,6 +210,8 @@ def fp8_dispatch_naive(recipe: Recipe, x, row_map, T: int, ep_axis: str):
 
 
 def _a2a(t, axis_name):
+    if axis_name is None:           # local EP=1 path (no mesh axis mapped)
+        return t
     EP = compat.axis_size(axis_name)
     shp = t.shape
     t = t.reshape(EP, shp[0] // EP, *shp[1:])
@@ -244,9 +246,13 @@ fp8_dispatch_naive.defvjp(_fdn_fwd, _fdn_bwd)
 # ---------------------------------------------------------------------------
 def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     """x: (T, D) local tokens.  w13: (E_loc, D, 2F); w2: (E_loc, F, D);
-    w_router: (D, E_total) replicated.  Returns (y (T, D), metrics dict)."""
+    w_router: (D, E_total) replicated.  Returns (y (T, D), metrics dict).
+
+    ep_axis=None runs the block fully locally (EP=1, every collective an
+    identity) — used when the whole train step is already inside a
+    data-parallel shard_map (repro.dist) and no expert axis exists."""
     T, D = x.shape
-    EP = compat.axis_size(cfg.ep_axis)
+    EP = compat.axis_size(cfg.ep_axis) if cfg.ep_axis is not None else 1
     E_loc = cfg.n_experts // EP
     assert E_loc * EP == cfg.n_experts, (cfg.n_experts, EP)
     k = cfg.top_k

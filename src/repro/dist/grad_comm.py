@@ -1,0 +1,140 @@
+"""The quantized data-parallel gradient wire.
+
+One bucket -> ONE uint8 message (reusing the single-message packing idiom of
+the overlapped EP dispatch, core/moe.py): the e4m3 payload rows and their
+int8 po2 exponents are bitcast-packed side by side, so the reduce-scatter
+costs one collective launch and (1 + 1/TILE) bytes per gradient element
+instead of 2 (bf16) or 4 (f32).
+
+Reduction semantics (mode='zero1'):
+  1. every replica quantizes its LOCAL gradient bucket with the globally
+     agreed po2 scale (scale_sync.agreed_po2_scale — a pmax of per-row amax);
+  2. the packed message reduce-scatters (all_to_all of the P row-blocks);
+  3. each replica dequantizes the P received sub-shards EXACTLY (shared po2
+     scales) and sums in f32, then divides by P (gradient mean);
+  4. the owned f32 shard feeds the ZeRO-1 optimizer update directly —
+     it is never re-quantized, so the DP axis adds exactly one quantization
+     per replica and no double quantization error.
+
+Sensitive leaves (plan.is_sensitive) take reduce_sensitive: a bf16-cast psum
+(or f32 when wire='f32'), replicated result.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import casts
+from repro.core.fp8 import E4M3, E4M3_MAX, TILE
+from repro.dist import scale_sync
+
+_E4M3_BYTES = 1
+_EXP_BYTES = 1
+
+
+def _u8(x):
+    """Bitcast to uint8, flattening the introduced trailing byte axis."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return u.reshape(*x.shape[:-1], -1)
+
+
+def pack_bucket(payload: jax.Array, exp: jax.Array) -> jax.Array:
+    """(rows, TILE) e4m3 + (rows, 1) int8 -> (rows, TILE+1) uint8."""
+    return jnp.concatenate([_u8(payload), _u8(exp)], axis=-1)
+
+
+def unpack_bucket(msg: jax.Array):
+    """Inverse of pack_bucket (works on any leading batch dims)."""
+    payload = jax.lax.bitcast_convert_type(msg[..., :TILE], E4M3)
+    exp = jax.lax.bitcast_convert_type(msg[..., TILE:], jnp.int8)
+    return payload, exp
+
+
+def quantize_bucket(flat: jax.Array, axis_name):
+    """Quantize a (rows, TILE) f32 bucket with the AGREED per-row po2 scale.
+    Returns (payload e4m3, exp int8 (rows, 1)); both scale-identical across
+    the DP axis.  Recorded as a fused cast (it is part of the comm kernel,
+    not a counted Fig.-2 activation cast)."""
+    casts.record("fused_quantize", "dp_wire", flat.size)
+    scale = scale_sync.agreed_po2_scale(flat, axis_name)
+    payload = jnp.clip(flat / scale, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+    return payload, scale_sync.scale_to_exp_i8(scale)
+
+
+def reduce_scatter_bucket(flat: jax.Array, axis_name, n_shards: int,
+                          wire: str) -> jax.Array:
+    """(rows, TILE) local f32 grads -> (rows/n_shards, TILE) owned f32 MEAN.
+
+    rows must divide n_shards (plan.py pads to shard_multiple).  With one
+    shard the wire is exercised end-to-end minus the collective."""
+    rows = flat.shape[0]
+    assert rows % n_shards == 0, (rows, n_shards)
+
+    if wire == "fp8":
+        payload, exp = quantize_bucket(flat, axis_name)
+        msg = pack_bucket(payload, exp).reshape(n_shards, rows // n_shards,
+                                                TILE + _EXP_BYTES)
+        if axis_name is not None and n_shards > 1:
+            msg = jax.lax.all_to_all(msg, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=False)
+        pay, exps = unpack_bucket(msg)
+        parts = pay.astype(jnp.float32) * scale_sync.exp_i8_to_scale(exps)
+        owned = jnp.sum(parts, axis=0)
+    else:
+        wdtype = jnp.bfloat16 if wire == "bf16" else jnp.float32
+        msg = flat.astype(wdtype).reshape(n_shards, rows // n_shards, TILE)
+        if axis_name is not None and n_shards > 1:
+            msg = jax.lax.all_to_all(msg, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=False)
+        owned = jnp.sum(msg.astype(jnp.float32), axis=0)
+    return owned / n_shards
+
+
+def all_gather_shard(shard: jax.Array, axis_name) -> jax.Array:
+    """ZeRO-1 epilogue: gather the updated (rows/P, TILE) param shards back
+    to the full (rows, TILE) bucket (param dtype, e.g. bf16)."""
+    if axis_name is None:
+        return shard
+    return jax.lax.all_gather(shard, axis_name, axis=0, tiled=True)
+
+
+def reduce_sensitive(g: jax.Array, axis_name, n_shards: int,
+                     wire: str) -> jax.Array:
+    """bf16-fallback reduction for sensitive leaves: cast to the fallback
+    wire dtype, psum, mean.  f32 wire keeps full precision (baseline)."""
+    wdtype = jnp.float32 if wire == "f32" else jnp.bfloat16
+    gw = g.astype(wdtype)
+    if axis_name is not None and n_shards > 1:
+        gw = jax.lax.psum(gw, axis_name)
+    return gw.astype(jnp.float32) / n_shards
+
+
+# ---------------------------------------------------------------------------
+# Bytes-on-wire model (benchmarks/dp_comm_ab.py + tests).  Counts bytes a
+# single device puts on the interconnect for the GRADIENT reduction, using
+# the standard ring factors: all-reduce moves 2(P-1)/P of the buffer,
+# reduce-scatter and all-gather (P-1)/P each.
+# ---------------------------------------------------------------------------
+def wire_grad_bytes(n_elems: int, n_shards: int, wire: str,
+                    mode: str = "zero1") -> float:
+    P = max(n_shards, 1)
+    ring = (P - 1) / P
+    rows = -(-n_elems // TILE)
+    if mode == "zero1":
+        if wire == "fp8":
+            payload = rows * TILE * _E4M3_BYTES + rows * _EXP_BYTES
+            # amax agreement: ring all-reduce (pmax) of per-row f32 amax
+            agree = 2 * ring * rows * 4
+            return ring * payload + agree
+        width = 2 if wire == "bf16" else 4
+        return ring * rows * TILE * width
+    # legacy implicit psum: full all-reduce of the gradients
+    width = 2 if wire == "bf16" else 4
+    return 2 * ring * n_elems * width
+
+
+def wire_param_bytes(n_elems: int, n_shards: int,
+                     param_bytes: int = 2) -> float:
+    """ZeRO-1 all-gather of updated params (bf16) — same for every wire."""
+    P = max(n_shards, 1)
+    return (P - 1) / P * n_elems * param_bytes

@@ -1,0 +1,185 @@
+"""DistPlan: the explicit, planned data-parallel communication subsystem.
+
+Replaces the implicit pjit-psum-only gradient reduction with a measurable
+plan: which leaves ride the FP8 wire, how they bucketize into fused
+messages, and how the ZeRO-1 optimizer shards own the flat gradient space.
+
+Layout model
+------------
+FP8-eligible leaves (large >=2-D weights) are flattened, padded to TILE
+(128)-element rows, and packed contiguously into buckets of ~bucket_mb
+payload each.  One bucket = ONE uint8 wire message (payload + exponent
+scales bitcast-packed, grad_comm.py).  Bucket row counts are padded to
+`shard_multiple` so any DP size that divides it can own an equal shard —
+this is what lets a ZeRO-1 checkpoint restore onto a different DP mesh.
+
+Sensitive leaves — norms, biases, router, embeddings, anything tiny or
+1-D — fall back to a bf16 psum: their gradients are high-dynamic-range,
+low-volume, and not worth a quantization error budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8 import TILE
+
+# Leaves that always take the bf16 fallback wire regardless of size: the
+# embedding/unembedding (sparse, outlier-heavy rows), the router (tiny but
+# routing-critical — FP8-LM keeps it high precision), and conv/qk-norm odds.
+SENSITIVE_NAMES = frozenset({
+    "embed", "lm_head", "w_router", "conv_w", "q_norm", "k_norm",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Static description of the DP-axis communication plan.
+
+    axis            mesh axis the reduction runs over
+    mode            'none' (pjit implicit psum, legacy) | 'zero1'
+    wire            'fp8' (e4m3 + po2 int8 exponents) | 'bf16' | 'f32'
+                    — bf16/f32 run the SAME bucketized reduce-scatter with a
+                    plain payload, giving a controlled parity baseline
+    bucket_mb       payload target per fused wire message
+    shard_multiple  bucket rows pad to this multiple so any DP size <= it
+                    (dividing it) owns an equal ZeRO-1 shard
+    min_fp8_size    leaves smaller than this stay on the bf16 fallback
+    policy          optimizer-state dtype policy (dist.opt_state.StatePolicy)
+    """
+    axis: str = "data"
+    mode: str = "zero1"
+    wire: str = "fp8"
+    bucket_mb: float = 4.0
+    shard_multiple: int = 64
+    min_fp8_size: int = 2048
+    policy: object = None  # None -> StatePolicy() (set in __post_init__)
+
+    def __post_init__(self):
+        if self.mode not in ("none", "zero1"):
+            raise ValueError(f"unknown dist mode {self.mode}")
+        if self.wire not in ("fp8", "bf16", "f32"):
+            raise ValueError(f"unknown wire format {self.wire}")
+        if self.policy is None:
+            from repro.dist.opt_state import StatePolicy
+            object.__setattr__(self, "policy", StatePolicy())
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One FP8-wire leaf's home in the flat gradient space."""
+    index: int          # position in the params tree's flatten order
+    path: str           # dotted key path (diagnostics / tests)
+    offset_rows: int    # first TILE-row inside the bucket
+    rows: int           # ceil(size / TILE)
+    size: int           # true element count (tail of the last row is pad)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    rows: int                       # padded: rows % shard_multiple == 0
+    slots: Tuple[LeafSlot, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradLayout:
+    """Static bucketization of a params tree under a DistPlan."""
+    buckets: Tuple[Bucket, ...]
+    sensitive: Tuple[Tuple[int, str], ...]   # (flatten index, path)
+    n_leaves: int
+
+    @property
+    def fp8_elems(self) -> int:
+        return sum(s.size for b in self.buckets for s in b.slots)
+
+    @property
+    def wire_rows(self) -> int:
+        return sum(b.rows for b in self.buckets)
+
+
+def path_str(path) -> str:
+    return ".".join(str(getattr(k, "key", getattr(k, "name", k)))
+                    for k in path)
+
+
+def is_sensitive(path: str, leaf, plan: DistPlan) -> bool:
+    name = path.split(".")[-1]
+    if name in SENSITIVE_NAMES:
+        return True
+    if getattr(leaf, "ndim", 0) <= 1:
+        return True
+    if leaf.size < plan.min_fp8_size:
+        return True
+    return not jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def build_layout(params, plan: DistPlan) -> GradLayout:
+    """Pure-static: consumes only shapes/paths (safe on tracers)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    buckets, slots, sensitive = [], [], []
+    cur_rows = 0
+    target_rows = max(int(plan.bucket_mb * 2 ** 20) // TILE, plan.shard_multiple)
+
+    def close():
+        nonlocal cur_rows, slots
+        if slots:
+            buckets.append(Bucket(rows=_round_up(cur_rows, plan.shard_multiple),
+                                  slots=tuple(slots)))
+        slots, cur_rows = [], 0
+
+    for i, (path, leaf) in enumerate(flat):
+        p = path_str(path)
+        if is_sensitive(p, leaf, plan):
+            sensitive.append((i, p))
+            continue
+        rows = -(-leaf.size // TILE)
+        if cur_rows and cur_rows + rows > target_rows:
+            close()
+        slots.append(LeafSlot(index=i, path=p, offset_rows=cur_rows,
+                              rows=rows, size=leaf.size))
+        cur_rows += rows
+    close()
+    return GradLayout(buckets=tuple(buckets), sensitive=tuple(sensitive),
+                      n_leaves=len(flat))
+
+
+# ---------------------------------------------------------------------------
+# Flat-space <-> tree movement (runs inside jit; layout is static).
+# ---------------------------------------------------------------------------
+def bucket_flat(bucket: Bucket, leaves, dtype=jnp.float32) -> jax.Array:
+    """Gather a bucket's leaves into its (rows, TILE) flat block, zero-padded
+    at each slot's row tail and at the bucket tail."""
+    parts = []
+    for s in bucket.slots:
+        x = leaves[s.index].reshape(-1).astype(dtype)
+        pad = s.rows * TILE - s.size
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        parts.append(x)
+    flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    tail = bucket.rows * TILE - flat.shape[0]
+    if tail:
+        flat = jnp.pad(flat, (0, tail))
+    return flat.reshape(bucket.rows, TILE)
+
+
+def bucket_scatter(bucket: Bucket, flat: jax.Array, like_leaves) -> dict:
+    """Slice a bucket's (rows, TILE) flat block back into {index: leaf}."""
+    v = flat.reshape(-1)
+    out = {}
+    for s in bucket.slots:
+        ref = like_leaves[s.index]
+        x = v[s.offset_rows * TILE:s.offset_rows * TILE + s.size]
+        out[s.index] = x.reshape(ref.shape).astype(ref.dtype)
+    return out

@@ -1,0 +1,52 @@
+"""Cross-replica scale agreement for the quantized DP wire.
+
+The paper eliminates double quantization error inside the MoE block by
+keeping one po2 scale valid across layout changes (§3.1).  The same
+discipline applied to the data-parallel axis: before any replica quantizes
+its gradient bucket, the per-tile amax is agreed by a pmax over the DP axis,
+so every replica quantizes with the SAME po2 scale.  Summing e4m3 payloads
+that share a scale dequantizes exactly (e4m3 -> f32 is exact, x * po2 is
+exact), so the reduction adds one quantization error per replica and ZERO
+re-quantization error — the reduced shard goes straight to the optimizer in
+f32 (ZeRO-1 owns it; nothing is quantized twice).
+
+Scales travel as int8 exponents (s = 2^e), 1 byte per 128-element tile —
+the wire stays pure uint8 after bitcast packing (grad_comm.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8 import E4M3_MAX, po2_scale
+
+
+def agree_amax(amax: jax.Array, axis_name) -> jax.Array:
+    """pmax over the DP axis: all replicas see the global per-tile amax.
+    axis_name=None (single-replica tests) is the identity."""
+    if axis_name is None:
+        return amax
+    return jax.lax.pmax(amax, axis_name)
+
+
+def agreed_po2_scale(x_rows: jax.Array, axis_name, fmt_max: float = E4M3_MAX
+                     ) -> jax.Array:
+    """Per-row agreed po2 scale for a (rows, TILE) flat gradient bucket.
+    Identical on every replica along `axis_name` by construction."""
+    amax = jnp.max(jnp.abs(x_rows), axis=-1, keepdims=True).astype(jnp.float32)
+    return po2_scale(agree_amax(amax, axis_name), fmt_max)
+
+
+def scale_to_exp_i8(scale: jax.Array) -> jax.Array:
+    """po2 scale -> int8 exponent (s = 2^e).  frexp is exact: s = 0.5 * 2^(e+1)
+    so e fits int8 for any scale produced by po2_scale (|e| <= 126)."""
+    m, e = jnp.frexp(scale.astype(jnp.float32))
+    del m  # always 0.5 for a po2 input
+    return (e - 1).astype(jnp.int8)
+
+
+def exp_i8_to_scale(exp: jax.Array) -> jax.Array:
+    """int8 exponent -> f32 po2 scale.  ldexp, NOT exp2: XLA's f32 exp2 is
+    not correctly rounded for |e| >= 13, which would silently break the
+    exact-po2 contract the whole wire rests on."""
+    return jnp.ldexp(jnp.float32(1.0), exp.astype(jnp.int32))

@@ -19,6 +19,7 @@ import traceback      # noqa: E402
 
 import jax            # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+from repro.compat import set_mesh  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_arch  # noqa: E402
 from repro.configs.base import SHAPES, applicable_shapes  # noqa: E402
@@ -177,7 +178,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     fn, args, meta, mesh = build_cell(arch, shape_name, multi_pod=multi_pod,
                                       recipe_name=recipe_name)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(*args)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()

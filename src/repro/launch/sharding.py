@@ -146,12 +146,15 @@ def tree_specs(cfg: ArchConfig, mesh, tree_shapes) -> Any:
 
 def opt_state_specs(cfg: ArchConfig, mesh, params_specs, opt_shapes) -> Any:
     """ZeRO-1: moments/master additionally sharded over 'data' on the first
-    dim that divides evenly and is not already sharded."""
+    dim that divides evenly and is not already sharded.  Tolerates QTensor-
+    encoded state leaves (AdamWConfig.state_policy): their flat (rows, TILE)
+    payload+scale pair shards over 'data' on the row dim."""
     dsize = mesh.shape["data"]
 
     def zero1(sharding, leaf):
-        spec = list(sharding.spec) + [None] * (len(leaf.shape)
-                                               - len(sharding.spec))
+        spec = (list(sharding.spec)
+                + [None] * (len(leaf.shape) - len(sharding.spec)))
+        spec = spec[:len(leaf.shape)]   # QTensor flat leaves drop param rank
         if any(s == "data" or (isinstance(s, tuple) and "data" in s)
                for s in spec):
             return NamedSharding(mesh, P(*spec))
@@ -162,17 +165,46 @@ def opt_state_specs(cfg: ArchConfig, mesh, params_specs, opt_shapes) -> Any:
         return NamedSharding(mesh, P(*spec))
 
     def build(path, leaf):
-        # path like ('m'|'v'|'master', <params path...>) or ('step',)
+        # path like ('m'|'v'|'master', <params path...>[, 'data'|'scale'])
+        # or ('step',)
         if not path or getattr(path[0], "key", None) == "step":
             return NamedSharding(mesh, P())
         sub_path = path[1:]
         ps = params_specs
+        qtensor_attr = False
         for k in sub_path:
+            if not isinstance(ps, (dict, list, tuple)):
+                qtensor_attr = True   # rest of the path is QTensor attrs
+                break
             key = getattr(k, "key", getattr(k, "idx", None))
             ps = ps[key]
+        if qtensor_attr:
+            # flat (rows, TILE) payload/scale pair: the param's spec does
+            # not apply to these dims — zero1 row-shard both consistently
+            ps = NamedSharding(mesh, P())
         return zero1(ps, leaf)
 
     return jax.tree_util.tree_map_with_path(build, opt_shapes)
+
+
+def dist_state_specs(mesh, opt_state, axis: str = "data") -> Any:
+    """NamedShardings for a DistPlan optimizer state (repro.dist): the flat
+    ZeRO-1 bucket arrays — e4m3/f16 payloads AND their po2 row scales —
+    shard over the DP axis on the row dim (scale-aware: slicing rows slices
+    payload and scales consistently); 'step' and the sensitive-leaf state
+    stay replicated.  Pass to checkpointing.restore to re-shard a ZeRO-1
+    checkpoint onto a different DP mesh size."""
+    dsize = mesh.shape[axis]
+
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        nd = getattr(leaf, "ndim", 0)
+        if "flat" in keys and nd >= 1 and leaf.shape[0] % dsize == 0 \
+                and leaf.shape[0] >= dsize:
+            return NamedSharding(mesh, P(axis, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec, opt_state)
 
 
 def _axes_size(mesh, ax):

@@ -2,11 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek_v2_lite \
       --recipe fp8_flow --steps 100 [--reduced] [--ckpt-dir DIR] \
-      [--elastic] [--compress-pod-grads]
+      [--elastic] [--dist-wire fp8]
 
 On a real TPU fleet this process runs once per host under
 `jax.distributed.initialize()`; on this container use --reduced for an
 executable configuration (full configs are exercised via launch.dryrun).
+
+--dist-wire {off,fp8,bf16,f32} selects the explicit DP communication plan
+(repro.dist.DistPlan): quantized ZeRO-1 gradient reduce-scatter + FP8-split
+optimizer state.  It replaces the old implicit pjit-psum reduction (and the
+never-wired --compress-pod-grads flag).  The wire needs a DP-only mesh, so
+with --reduced the test mesh spans every visible device on the data axis.
 """
 import argparse
 
@@ -15,8 +21,10 @@ import jax
 from repro.configs import get_arch
 from repro.core.recipes import get_recipe
 from repro.data.pipeline import DataConfig
+from repro.dist import DistPlan
+from repro.dist.grad_comm import wire_grad_bytes
 from repro.launch.mesh import make_production_mesh, make_test_mesh
-from repro.launch.sharding import make_plan
+from repro.launch.sharding import dist_state_specs, make_plan
 from repro.models.lm import ParallelPlan
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.fault_tolerance import ElasticTrainer
@@ -36,32 +44,59 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--elastic", action="store_true")
+    ap.add_argument("--dist-wire", default="off",
+                    choices=["off", "fp8", "bf16", "f32"],
+                    help="explicit DP gradient wire + ZeRO-1 (repro.dist)")
     args = ap.parse_args()
 
+    dist = DistPlan(wire=args.dist_wire) if args.dist_wire != "off" else None
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-        mesh = make_test_mesh()
+        # DP size must divide DistPlan.shard_multiple for equal ZeRO shards
+        ndev = max(d for d in range(1, jax.device_count() + 1)
+                   if dist.shard_multiple % d == 0
+                   and jax.device_count() % d == 0) \
+            if dist is not None else 1
+        if dist is not None and ndev < jax.device_count():
+            print(f"[train] WARNING: DP size clamped to {ndev} of "
+                  f"{jax.device_count()} devices (must divide "
+                  f"DistPlan.shard_multiple={dist.shard_multiple}); "
+                  f"the rest sit idle")
+        mesh = make_test_mesh((ndev, 1))
         plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         plan = make_plan(cfg, mesh)
     print(f"[train] {args.arch} ({cfg.n_params()/1e9:.2f}B params) "
           f"recipe={args.recipe} mesh={dict(mesh.shape)}")
+    if dist is not None:
+        n_dp = mesh.shape[dist.axis]
+        n = cfg.n_params()
+        print(f"[train] dist wire={dist.wire} zero1 over '{dist.axis}' "
+              f"x{n_dp}: ~{wire_grad_bytes(n, n_dp, dist.wire)/2**20:.0f} "
+              f"MiB grad bytes/step/device "
+              f"(bf16 all-reduce: {wire_grad_bytes(n, n_dp, 'bf16', 'none')/2**20:.0f} MiB)")
 
     recipe = get_recipe(args.recipe)
     opt = AdamWConfig(lr=args.lr)
-    step = jax.jit(make_train_step(cfg, recipe, plan, opt,
+    step = jax.jit(make_train_step(cfg, recipe, plan, opt, dist=dist,
                                    total_steps=args.steps,
                                    warmup_steps=max(args.steps // 10, 1)))
-    state = init_train_state(cfg, opt, jax.random.key(0))
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                       global_batch=args.global_batch)
     elastic = ElasticTrainer(n_data_shards=mesh.shape["data"]) \
         if args.elastic else None
+    restore_sh = None
+    if dist is not None and args.ckpt_dir is not None:
+        restore_sh = {"params": jax.tree.map(
+                          lambda _: None, state["params"]),
+                      "opt": dist_state_specs(mesh, state["opt"], dist.axis)}
     with mesh:
         state, hist = run_loop(step, state, data, n_steps=args.steps,
-                               ckpt_dir=args.ckpt_dir, elastic=elastic)
+                               ckpt_dir=args.ckpt_dir, elastic=elastic,
+                               restore_shardings=restore_sh)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
           f"{hist[-1]['loss']:.4f}")
 

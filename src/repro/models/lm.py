@@ -291,9 +291,22 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
     we13, we2, wr = p["we13"], p["we2"], p["w_router"]
 
     if plan.mesh is None:
-        # single-device tests: 1x1 mesh path not available; run TP body on a
-        # trivial mesh is handled by callers constructing a real plan.
-        raise ValueError("MoE stage requires a ParallelPlan with a mesh")
+        # Fully-local MoE (EP=1, ep_axis=None: every collective an identity).
+        # This is the path the DistPlan train step takes: the whole step is
+        # already inside a shard_map over the DP axis (repro.dist), so the
+        # forward must not open a nested shard_map.
+        from repro.core.quant import QTensor as _QT0
+        if isinstance(we13, _QT0):
+            raise ValueError("W8-resident MoE weights need a mesh plan")
+        E_l, Dl, gl, Fl = we13.shape
+        mcfg_local = dataclasses.replace(mcfg, ep_axis=None, dp_axes=())
+        y, m = moe_block(recipe, mcfg_local, x.reshape(B * S, D), wr,
+                         we13.reshape(E_l, Dl, gl * Fl), we2)
+        y = y.reshape(B, S, D)
+        if cfg.n_shared_experts:
+            y = y + _mlp_stage(cfg, recipe, plan,
+                               {"w13": p["ws13"], "w2": p["ws2"]}, x)
+        return y, jnp.mean(m["aux_loss"])
 
     from repro.compat import shard_map
     gather = plan.fsdp_axis

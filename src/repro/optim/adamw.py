@@ -1,11 +1,16 @@
-"""AdamW with FP32 master weights, optional BF16 moments, global-norm clip.
+"""AdamW with FP32 master weights, optional low-precision state, global-norm
+clip.
 
 Built from scratch (no optax dependency).  At scale the optimizer state is
-the dominant memory term, so each piece is dtype-configurable:
-  master  : f32 copy of params (params themselves may live in bf16)
-  m, v    : f32 or bf16 (bf16 moments are standard at >100B scale)
-State sharding (ZeRO-1 over the data axis) is applied by the caller via
-in/out shardings on the update step — the math here is sharding-agnostic.
+the dominant memory term, so each piece is dtype-configurable two ways:
+  moment_dtype    : legacy knob — f32 or bf16 moments, leaf-shaped arrays
+  state_policy    : repro.dist.opt_state.StatePolicy — FP8-split state
+                    (e4m3 m / bf16 v / po2-scaled f16 master behind QTensor)
+                    for large leaves; small/1-D leaves keep f32
+State sharding (ZeRO-1 over the data axis) is applied by the caller — either
+via in/out shardings on the update step, or explicitly by the DistPlan train
+step (repro.dist), which reuses `adamw_math` on flat owned shards so there is
+ONE copy of the update math.
 """
 from __future__ import annotations
 
@@ -26,70 +31,132 @@ class AdamWConfig:
     grad_clip: float = 1.0
     moment_dtype: Any = jnp.float32      # bf16 at >100B scale
     master_weights: bool = True
+    # FP8-split state (dist.opt_state.StatePolicy); None = legacy behavior
+    state_policy: Optional[Any] = None
+
+
+def adamw_math(cfg: AdamWConfig, g32, m32, v32, base32, lr, b1c, b2c):
+    """The single copy of the update math (f32 in, f32 out).  `g32` arrives
+    pre-clipped.  Shared by the per-leaf path below and the ZeRO-1 flat-shard
+    path (repro.dist.opt_state.flat_bucket_update)."""
+    m_new = cfg.b1 * m32 + (1 - cfg.b1) * g32
+    v_new = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+    mhat = m_new / b1c
+    vhat = v_new / b2c
+    new_master = base32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                + cfg.weight_decay * base32)
+    return new_master, m_new, v_new
 
 
 def init_state(cfg: AdamWConfig, params):
+    pol = cfg.state_policy
+    if pol is None:
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
+                              params),
+        }
+        if cfg.master_weights:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32),
+                                           params)
+        return state
+
+    from repro.dist import opt_state as ost
+
+    def init_m(p):
+        return ost.zeros_encoded(pol.m if pol.applies(p) else "f32", p)
+
+    def init_v(p):
+        return ost.zeros_encoded(pol.v if pol.applies(p) else "f32", p)
+
     state = {
         "step": jnp.zeros((), jnp.int32),
-        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
-                          params),
-        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
-                          params),
+        "m": jax.tree.map(init_m, params),
+        "v": jax.tree.map(init_v, params),
     }
     if cfg.master_weights:
-        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        # policy leaves encode straight from the param (po2 division is
+        # exact in bf16) — no full-tree f32 temporaries
+        state["master"] = jax.tree.map(
+            lambda p: ost.encode(pol.master if pol.applies(p) else "f32", p),
+            params)
     return state
 
 
 def global_norm(grads):
-    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in jax.tree.leaves(grads)))
+    """Global L2 norm accumulated in ONE fused f32 scalar pass: per-leaf
+    squared sums are stacked and reduced once — no chained adds, no
+    materialized f32 copies of the leaves (the cast fuses into the sum)."""
+    parts = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads)]
+    if not parts:
+        return jnp.float32(0.0)
+    return jnp.sqrt(jnp.sum(jnp.stack(parts)))
+
+
+def clip_factor(cfg: AdamWConfig, gnorm):
+    return jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+
+
+def bias_corrections(cfg: AdamWConfig, step):
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    return b1c, b2c
 
 
 def apply_updates(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
     """Returns (new_params, new_state, metrics)."""
     step = state["step"] + 1
     gnorm = global_norm(grads)
-    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
-        if cfg.grad_clip else jnp.float32(1.0)
-    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
-    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    clip = clip_factor(cfg, gnorm)
+    b1c, b2c = bias_corrections(cfg, step)
     lr = cfg.lr * lr_scale
+    pol = cfg.state_policy
+    if pol is not None:
+        from repro.dist import opt_state as ost
 
     def upd(p, g, m, v, master):
         g32 = g.astype(jnp.float32) * clip
-        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
-        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
-        mhat = m_new / b1c
-        vhat = v_new / b2c
-        base = master.astype(jnp.float32) if master is not None \
-            else p.astype(jnp.float32)
-        new_master = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
-                                  + cfg.weight_decay * base)
-        return (new_master.astype(p.dtype), m_new.astype(m.dtype),
-                v_new.astype(v.dtype), new_master if master is not None
-                else None)
+        if pol is None:
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            base = master.astype(jnp.float32) if master is not None \
+                else p.astype(jnp.float32)
+        else:
+            m32 = ost.decode(m, p.shape, p.size)
+            v32 = ost.decode(v, p.shape, p.size)
+            base = ost.decode(master, p.shape, p.size) if master is not None \
+                else p.astype(jnp.float32)
+        new_master, m_new, v_new = adamw_math(cfg, g32, m32, v32, base,
+                                              lr, b1c, b2c)
+        if pol is None:
+            enc_m, enc_v = m_new.astype(m.dtype), v_new.astype(v.dtype)
+            enc_master = new_master if master is not None else None
+        else:
+            enc_m = ost.encode_like(m_new, m)
+            enc_v = ost.encode_like(v_new, v)
+            enc_master = ost.encode_like(new_master, master) \
+                if master is not None else None
+        return (new_master.astype(p.dtype), enc_m, enc_v, enc_master)
 
     masters = state.get("master")
     if masters is None:
-        masters = jax.tree.map(lambda _: None, params,
-                               is_leaf=lambda x: x is None)
         triples = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
                                params, grads, state["m"], state["v"])
     else:
         triples = jax.tree.map(upd, params, grads, state["m"], state["v"],
                                masters)
 
-    new_params = jax.tree.map(lambda t: t[0], triples,
-                              is_leaf=lambda x: isinstance(x, tuple))
+    is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+    new_params = jax.tree.map(lambda t: t[0], triples, is_leaf=is_tup)
     new_state = {
         "step": step,
-        "m": jax.tree.map(lambda t: t[1], triples,
-                          is_leaf=lambda x: isinstance(x, tuple)),
-        "v": jax.tree.map(lambda t: t[2], triples,
-                          is_leaf=lambda x: isinstance(x, tuple)),
+        "m": jax.tree.map(lambda t: t[1], triples, is_leaf=is_tup),
+        "v": jax.tree.map(lambda t: t[2], triples, is_leaf=is_tup),
     }
     if cfg.master_weights:
-        new_state["master"] = jax.tree.map(
-            lambda t: t[3], triples, is_leaf=lambda x: isinstance(x, tuple))
+        new_state["master"] = jax.tree.map(lambda t: t[3], triples,
+                                           is_leaf=is_tup)
     return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -9,6 +9,12 @@ overhead) at a quantization error bounded by the po2 tile quantizer.
 
 Error feedback (residual carrying) keeps the compression unbiased over
 steps: the quantization residual of step t is added back at step t+1.
+
+NOTE: the TRAIN-path gradient reduction now lives in repro.dist
+(DistPlan): bucketized, scale-agreed (no re-quantization of the reduced
+value), ZeRO-1-sharded, packed into one uint8 message per bucket.  This
+module remains the standalone psum-shaped primitive for the cross-pod hop
+and the compression-error benches.
 """
 from __future__ import annotations
 

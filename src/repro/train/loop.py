@@ -17,14 +17,19 @@ def run(train_step: Callable, state, data_cfg: DataConfig, *,
         n_steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
         log_every: int = 10, elastic: Optional[ElasticTrainer] = None,
         grad_accum: int = 1, fail_injector: Optional[Callable] = None,
-        log_fn=print):
+        restore_shardings=None, log_fn=print):
     """Runs `n_steps`, restarting from the latest checkpoint if present.
-    `fail_injector(step)` lets tests simulate host failures/stragglers."""
+    `fail_injector(step)` lets tests simulate host failures/stragglers.
+    `restore_shardings` (optional pytree of NamedSharding matching `state`,
+    e.g. launch/sharding.dist_state_specs for ZeRO-1 flat state) re-shards
+    on restore — restart onto a different DP mesh size just works because
+    the checkpoint holds the full logical arrays."""
     start = 0
     if ckpt_dir is not None:
         latest = checkpointing.latest_step(ckpt_dir)
         if latest is not None:
-            state, start = checkpointing.restore(ckpt_dir, state)
+            state, start = checkpointing.restore(
+                ckpt_dir, state, shardings=restore_shardings)
             start += 1
             log_fn(f"[loop] restored checkpoint step={start - 1}")
 
@@ -53,7 +58,8 @@ def run(train_step: Callable, state, data_cfg: DataConfig, *,
                        f"checkpoint and continuing")
                 if ckpt_dir is not None and \
                         checkpointing.latest_step(ckpt_dir) is not None:
-                    state, _ = checkpointing.restore(ckpt_dir, state)
+                    state, _ = checkpointing.restore(
+                        ckpt_dir, state, shardings=restore_shardings)
             elif reassign:
                 log_fn(f"[loop] stragglers reassigned: {reassign}")
 

@@ -1,13 +1,26 @@
 """The jitted training step: loss -> grad -> (optional grad-accum) ->
-(optional FP8-compressed pod reduction) -> AdamW update.
+gradient reduction -> AdamW update.
 
 `make_train_step` closes over static config (arch, recipe, plan, optimizer)
 and returns a function (state, batch) -> (state, metrics) suitable for
-jax.jit with explicit in/out shardings (launch/sharding.py)."""
+jax.jit with explicit in/out shardings (launch/sharding.py).
+
+Two reduction regimes:
+  dist=None      the legacy implicit path — the batch is sharded over the DP
+                 axes and pjit inserts f32 psums for the gradients.
+  dist=DistPlan  the explicit FP8-native wire (repro.dist): the whole step
+                 runs inside ONE shard_map over the DP axis; gradients
+                 reduce-scatter as e4m3 payload + po2 int8 exponents packed
+                 into one uint8 message per bucket (pre-agreed scales, no
+                 double quantization error), the ZeRO-1 owned shard updates
+                 FP8-split optimizer state, and the updated bf16 param
+                 shards all-gather back.  Sensitive leaves (norms, router,
+                 embeddings) ride a bf16 psum.
+"""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict
+import dataclasses
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,14 +33,22 @@ from repro.optim import adamw, schedules
 
 def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                     opt: adamw.AdamWConfig, *, grad_accum: int = 1,
-                    compress_pod_grads: bool = False,
+                    dist: Optional[Any] = None,
                     total_steps: int = 100_000, warmup_steps: int = 100):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    state = {'params', 'opt': adamw state}
+    state = {'params', 'opt': adamw state (or dist state when dist is set)}
     batch = {'tokens' (B, S), 'targets', 'mask', ...} with B the
     PER-MICROBATCH size when grad_accum > 1 — the step loops microbatches
-    via lax.scan over the leading accum axis of the batch."""
+    via lax.scan over the leading accum axis of the batch.
+
+    dist: an active repro.dist.DistPlan routes the step through the
+    quantized ZeRO-1 wire (see _make_dist_train_step)."""
+    if dist is not None and dist.active:
+        return _make_dist_train_step(cfg, recipe, plan, opt, dist,
+                                     grad_accum=grad_accum,
+                                     total_steps=total_steps,
+                                     warmup_steps=warmup_steps)
 
     def loss_fn(params, mb):
         loss, metrics = forward(cfg, recipe, plan, params, mb)
@@ -35,39 +56,8 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
 
     def train_step(state, batch):
         params = state["params"]
-        if grad_accum > 1:
-            def acc_body(carry, mb):
-                gsum, lsum = carry
-                (loss, metrics), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, mb)
-                gsum = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
-                return (gsum, lsum + loss), None
-
-            g0 = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0.0)),
-                                           batch)
-            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
-            loss = lsum / grad_accum
-            metrics = {}
-        else:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
-
-        if compress_pod_grads and plan.mesh is not None and \
-                "pod" in getattr(plan.mesh, "axis_names", ()):
-            from repro.compat import shard_map
-            from jax.sharding import PartitionSpec as P
-            from repro.runtime.compression import compressed_psum
-            # grads arrive pod-sharded (per-pod partial sums when the batch
-            # is pod-split); reduce them over the pod axis on an FP8 wire
-            spec = P()  # grads replicated within pod after pjit's psums
-            # NOTE: the pod reduction is modeled inside the loss psum by
-            # pjit when batch is sharded over 'pod'; compressed_psum is the
-            # explicit alternative exercised by runtime tests + benches.
-            del spec
-
+        loss, metrics, grads = _local_grads(loss_fn, params, batch,
+                                            grad_accum)
         lr_scale = schedules.warmup_cosine(
             state["opt"]["step"], total_steps=total_steps,
             warmup_steps=warmup_steps)
@@ -81,8 +71,181 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
     return train_step
 
 
+def _local_grads(loss_fn, params, batch, grad_accum):
+    """value+grad, optionally scanning a leading grad-accum batch axis."""
+    if grad_accum > 1:
+        def acc_body(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0.0)),
+                                       batch)
+        grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        return lsum / grad_accum, {}, grads
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, batch)
+    return loss, metrics, grads
+
+
+# ---------------------------------------------------------------------------
+# The explicit FP8 wire + ZeRO-1 step (repro.dist).
+# ---------------------------------------------------------------------------
+def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
+                          opt: adamw.AdamWConfig, dist, *, grad_accum: int,
+                          total_steps: int, warmup_steps: int):
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.dist import grad_comm
+    from repro.dist import opt_state as ost
+    from repro.dist.plan import bucket_flat, bucket_scatter, build_layout
+
+    mesh = plan.mesh
+    if mesh is None or dist.axis not in mesh.axis_names:
+        raise ValueError(f"DistPlan needs a plan.mesh with axis "
+                         f"'{dist.axis}'; got {mesh}")
+    n_dp = mesh.shape[dist.axis]
+    nontrivial = [a for a in mesh.axis_names
+                  if a != dist.axis and mesh.shape[a] != 1]
+    if nontrivial:
+        raise ValueError(
+            f"the DistPlan wire runs the forward replica-locally inside a "
+            f"shard_map over '{dist.axis}'; model-parallel axes {nontrivial} "
+            f"cannot nest another shard_map on jax {jax.__version__} — use "
+            f"dist=None (implicit pjit psum) on model-parallel meshes")
+    if dist.shard_multiple % n_dp != 0:
+        raise ValueError(
+            f"DP size {n_dp} does not divide DistPlan.shard_multiple="
+            f"{dist.shard_multiple}: bucket rows pad to shard_multiple, so "
+            f"ZeRO-1 shards would be unequal — set shard_multiple to a "
+            f"multiple of the DP size (or size the data axis to a divisor)")
+    # the forward must not open a nested shard_map: run it replica-local
+    local_plan = dataclasses.replace(plan, mesh=None, dp_axes=(),
+                                     fsdp_axis=None, shard_map_mlp=False,
+                                     moe_overlap=None)
+    pol = dist.policy
+    axis = dist.axis
+
+    def loss_fn(params, mb):
+        loss, metrics = forward(cfg, recipe, local_plan, params, mb)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        layout = build_layout(params, dist)     # static (shapes only)
+        treedef = jax.tree.structure(params)
+
+        def body(params, opt_st, batch):
+            loss, fwd_metrics, grads = _local_grads(loss_fn, params, batch,
+                                                    grad_accum)
+            pleaves = treedef.flatten_up_to(params)
+            gleaves = treedef.flatten_up_to(grads)
+
+            # quantized reduce-scatter: one fused uint8 message per bucket,
+            # scales pre-agreed (scale_sync) so the sum never re-quantizes
+            owned = [grad_comm.reduce_scatter_bucket(
+                bucket_flat(b, gleaves), axis, n_dp, dist.wire)
+                for b in layout.buckets]
+            sens_g = {p: grad_comm.reduce_sensitive(gleaves[i], axis, n_dp,
+                                                    dist.wire)
+                      for i, p in layout.sensitive}
+
+            # global grad norm in one fused f32 scalar pass: each replica
+            # owns disjoint shards, so psum(sum owned^2) is the exact total
+            parts = [jnp.sum(jnp.square(o)) for o in owned]
+            sq_owned = jnp.sum(jnp.stack(parts)) if parts \
+                else jnp.float32(0.0)
+            sq_owned = jax.lax.psum(sq_owned, axis)
+            sq_sens = [jnp.sum(jnp.square(g)) for g in sens_g.values()]
+            gnorm = jnp.sqrt(sq_owned + (jnp.sum(jnp.stack(sq_sens))
+                                         if sq_sens else jnp.float32(0.0)))
+            clip = adamw.clip_factor(opt, gnorm)
+            step = opt_st["step"] + 1
+            b1c, b2c = adamw.bias_corrections(opt, step)
+            lr = opt.lr * schedules.warmup_cosine(
+                opt_st["step"], total_steps=total_steps,
+                warmup_steps=warmup_steps)
+
+            # ZeRO-1: update the owned shard, all-gather bf16 param shards
+            new_leaves, new_flat = {}, []
+            for b, o_g, st_b in zip(layout.buckets, owned, opt_st["flat"]):
+                shard32 = None
+                if "master" not in st_b:
+                    rows_l = b.rows // n_dp
+                    idx = jax.lax.axis_index(axis)
+                    # flatten in the (bf16) param dtype, not f32: only the
+                    # owned 1/P shard is widened (fp8-class leaves are all
+                    # low-precision unless the user inits f32 params)
+                    fdt = jnp.float32 if any(
+                        pleaves[s.index].dtype == jnp.float32
+                        for s in b.slots) else jnp.bfloat16
+                    shard32 = jax.lax.dynamic_slice_in_dim(
+                        bucket_flat(b, pleaves, fdt), idx * rows_l,
+                        rows_l, 0).astype(jnp.float32)
+                new_shard, new_st = ost.flat_bucket_update(
+                    opt, pol, st_b, o_g, clip, lr, b1c, b2c, shard32)
+                full = grad_comm.all_gather_shard(new_shard, axis)
+                new_leaves.update(bucket_scatter(b, full, pleaves))
+                new_flat.append(new_st)
+
+            # sensitive leaves: replicated classic update (f32 state)
+            sens_st = opt_st["sens"]
+            new_sens = {"m": {}, "v": {}}
+            if "master" in sens_st:
+                new_sens["master"] = {}
+            for i, pth in layout.sensitive:
+                p = pleaves[i]
+                g32 = sens_g[pth] * clip
+                base = sens_st["master"][pth] if "master" in sens_st \
+                    else p.astype(jnp.float32)
+                new_master, m_new, v_new = adamw.adamw_math(
+                    opt, g32, sens_st["m"][pth], sens_st["v"][pth], base,
+                    lr, b1c, b2c)
+                new_leaves[i] = new_master.astype(p.dtype)
+                new_sens["m"][pth] = m_new
+                new_sens["v"][pth] = v_new
+                if "master" in sens_st:
+                    new_sens["master"][pth] = new_master
+
+            new_params = jax.tree.unflatten(
+                treedef, [new_leaves[i] for i in range(len(pleaves))])
+            new_opt = {"step": step, "flat": tuple(new_flat),
+                       "sens": new_sens}
+            metrics = {k: jax.lax.pmean(v, axis)
+                       for k, v in dict(fwd_metrics).items()}
+            metrics["loss"] = jax.lax.pmean(loss, axis)
+            metrics["grad_norm"] = gnorm
+            metrics["lr"] = lr
+            return new_params, new_opt, metrics
+
+        lead = 1 if grad_accum > 1 else 0
+        batch_specs = jax.tree.map(
+            lambda a: P(*((None,) * lead + (axis,))), batch)
+        opt_in = {"step": P(),
+                  "flat": tuple(P(axis, None) for _ in layout.buckets),
+                  "sens": P()}
+        sm = shard_map(body, mesh=mesh,
+                       in_specs=(P(), opt_in, batch_specs),
+                       out_specs=(P(), opt_in, P()))
+        new_params, new_opt, metrics = sm(params, state["opt"], batch)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
 def init_train_state(cfg: ArchConfig, opt: adamw.AdamWConfig, key,
-                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+                     dtype=jnp.bfloat16, dist=None) -> Dict[str, Any]:
     from repro.models.lm import init_params
     params = init_params(cfg, key, dtype)
+    if dist is not None and dist.active:
+        from repro.dist import opt_state as ost
+        from repro.dist.plan import build_layout
+        layout = build_layout(params, dist)
+        return {"params": params,
+                "opt": ost.init_dist_state(opt, params, layout, dist)}
     return {"params": params, "opt": adamw.init_state(opt, params)}
