@@ -13,7 +13,17 @@ bytes-on-wire model (no TPU fabric on this container; ring factors
 (P-1)/P per hop, all-reduce = 2 hops):
 
   PYTHONPATH=src python benchmarks/dp_comm_ab.py --dry-run     # CI smoke
+  PYTHONPATH=src python benchmarks/dp_comm_ab.py --dry-run --overlap
   PYTHONPATH=src python benchmarks/dp_comm_ab.py --devices 8 --steps 3
+
+--overlap additionally lowers the STREAMING schedule (DistPlan
+schedule='stream': layer-aligned reverse-order buckets, each quantize +
+reduce-scatter issued from inside the staged backward) and checks the
+jaxpr for the structural property the schedule exists for: at least one
+bucket reduce-scatter appears BEFORE the last backward GEMM (the post-hoc
+step issues every one after), plus the modelled exposed-comm delta (greedy
+hiding of each bucket's wire time behind the remaining layers' backward
+compute).
 
 Acceptance gate (dry-run): the FP8 bucket path moves >= 3x fewer gradient
 bytes than a bf16 all-reduce of the same leaves (1.008 B/elem + amax
@@ -27,7 +37,7 @@ import sys
 
 
 def run(devices: int = 8, arch: str = "qwen15_05b", steps: int = 2,
-        dry_run: bool = False):
+        dry_run: bool = False, overlap: bool = False):
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -108,10 +118,59 @@ def run(devices: int = 8, arch: str = "qwen15_05b", steps: int = 2,
         assert ratio_bucket >= 3.0, \
             f"FP8 bucket path only {ratio_bucket:.2f}x below bf16 (< 3x)"
 
+    # ---- streaming schedule: lowering + jaxpr interleave + exposed model -
+    if overlap:
+        from benchmarks.common import ici_model_us
+        from repro.dist.grad_comm import stream_exposed_us
+        from repro.roofline.analysis import PEAK_FLOPS_FP8
+
+        dist_s = DistPlan(wire="fp8", schedule="stream")
+        state_s = init_train_state(cfg, opt, jax.random.key(0), dist=dist_s)
+        layout_s = build_layout(state_s["params"], dist_s)
+        step_s = make_train_step(cfg, recipe, plan, opt, dist=dist_s,
+                                 total_steps=100, warmup_steps=5)
+        jx_s = str(jax.make_jaxpr(step_s)(state_s, batch))
+        n_a2a_s = jx_s.count("all_to_all")
+        with mesh:
+            jax.jit(step_s).lower(state_s, batch)   # the "it lowers" gate
+        interleaved = 0 <= jx_s.find("all_to_all") < jx_s.rfind("dot_general")
+        posthoc_interleaved = 0 <= jaxpr.find("all_to_all") \
+            < jaxpr.rfind("dot_general")
+        if P > 1:
+            assert n_a2a_s == len(layout_s.buckets), (n_a2a_s,
+                                                      len(layout_s.buckets))
+            assert interleaved, \
+                "streaming: no bucket reduce-scatter before the last " \
+                "backward GEMM in the jaxpr"
+            assert not posthoc_interleaved, \
+                "post-hoc baseline unexpectedly interleaved"
+
+        # exposed-comm model: bucket i's wire time hides behind the NEXT
+        # layer's backward GEMMs (greedy drain, reverse emission order);
+        # per-layer backward ~= 4 flops/param/token on the local shard
+        tok_local = data.global_batch * data.seq_len / P
+        bucket_us = [ici_model_us(wire_grad_bytes(b.rows * TILE, P, "fp8"))
+                     for b in layout_s.buckets]
+        bwd_us = [4.0 * sum(s.size for s in b.slots) * tok_local
+                  / PEAK_FLOPS_FP8 * 1e6 for b in layout_s.buckets]
+        overlap_us = bwd_us[1:] + [0.0]
+        exposed_stream = stream_exposed_us(bucket_us, overlap_us)
+        exposed_posthoc = sum(bucket_us)
+        emit(f"dp_comm_stream_p{P}_{arch}", exposed_stream,
+             f"posthoc_exposed_us={exposed_posthoc:.1f};"
+             f"stream_exposed_us={exposed_stream:.1f};"
+             f"hidden_us={exposed_posthoc - exposed_stream:.1f};"
+             f"buckets={len(layout_s.buckets)};a2a_ops={n_a2a_s};"
+             f"jaxpr_interleaved={interleaved}")
+        assert exposed_stream <= exposed_posthoc + 1e-9
+
     if dry_run:
+        extra = " + streaming schedule interleaves in the jaxpr" \
+            if overlap else ""
         print(f"dp_comm_ab: dry-run OK (lowered fp8 wire on {P} devices; "
               f"bucket path {ratio_bucket:.2f}x fewer grad bytes than bf16 "
-              f"all-reduce, {ratio_e2e:.2f}x end-to-end incl. bf16 fallback)")
+              f"all-reduce, {ratio_e2e:.2f}x end-to-end incl. bf16 "
+              f"fallback{extra})")
         return
 
     # ---- CPU wall-clock A/B (functional check, not a fabric model) -------
@@ -133,6 +192,9 @@ def main():
     ap.add_argument("--steps", type=int, default=2)
     ap.add_argument("--dry-run", action="store_true",
                     help="lower (not time) the wire; assert the byte model")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also lower the streaming schedule and assert its "
+                         "reduce-scatters interleave with backward GEMMs")
     args = ap.parse_args()
 
     # multi-device CPU mesh must be requested before jax initializes
@@ -142,7 +204,7 @@ def main():
                                    + f" {flag}={args.devices}")
 
     run(devices=args.devices, arch=args.arch, steps=args.steps,
-        dry_run=args.dry_run)
+        dry_run=args.dry_run, overlap=args.overlap)
 
 
 if __name__ == "__main__":

@@ -379,57 +379,143 @@ def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
     return y.astype(x.dtype), {"aux_loss": aux, "drop_frac": drop_frac}
 
 
-def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
-    """Decode-time EP MoE: the token batch is small (<= a few hundred) and
-    REPLICATED across the ep_axis; each rank computes only its resident
-    experts' tokens and the combine is a psum over ep_axis (vLLM-style EP
-    serving — no all-to-all for tiny batches).  Forward-only (serving)."""
+# ---------------------------------------------------------------------------
+# Decode-time EP MoE as a STAGED program (router -> dispatch -> expert FFN ->
+# combine; the layer-stage names of models/lm.py map 1:1 onto these
+# functions).  The combine is a psum over ep_axis (vLLM-style EP serving —
+# no all-to-all for tiny batches), and the staged decomposition is what lets
+# _decode_pipeline double-buffer it: chunk c's psum is on the wire while
+# chunk c+1 runs its router/dispatch/expert stages.
+# ---------------------------------------------------------------------------
+def decode_stage_router(recipe: Recipe, cfg: MoEConfig, x, w_router, r,
+                        E_loc: int):
+    """Stage 'router' (decode, whole batch): top-k routing + the local-
+    assignment map + the block's ONE entry quantize (fp8 recipes).  Routing
+    the full batch here keeps aux_loss identical at any pipeline depth."""
+    p, ids, aux = router_topk(x, w_router, cfg.top_k)
+    local = (ids // E_loc) == r                     # (T, k) mine?
+    local_e = jnp.where(local, ids % E_loc, -1).reshape(-1)   # (T*k,)
+    if recipe.is_fp8:
+        # W8A8 serving path: quantize activations once; weights quantized in
+        # the grouped GEMM (forward-only, no backward dataflow concerns).
+        # Chunks slice the QTensor — row scales are row-local, so pipeline
+        # depth never re-quantizes.
+        xq = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
+    else:
+        xq = x.astype(jnp.bfloat16)
+    return p, aux, local_e, xq
+
+
+def decode_stage_dispatch(recipe: Recipe, cfg: MoEConfig, xq, local_e_c,
+                          tok0: int, E_loc: int, C_dec: int):
+    """Stage 'dispatch' (decode, one chunk): expert-slot plan + the local
+    gather into the (E_loc, C_dec, D) grouped layout.  Returns (ffn_in,
+    row_map_exp, tok_of_slot [chunk-local], n_valid, n_kept)."""
+    D = cfg.d_model
+    row_map_exp, _ = _expert_plan(local_e_c, E_loc, C_dec)
+    tok_loc = jnp.where(row_map_exp >= 0, row_map_exp // cfg.top_k, -1)
+    tok_glob = jnp.where(tok_loc >= 0, tok_loc + tok0, -1)
+    if recipe.is_fp8:
+        d = _take_rows(xq.data, tok_glob)
+        s = _take_rows(xq.scale, tok_glob, fill=1.0)
+        ffn_in = QTensor(d.reshape(E_loc, C_dec, D),
+                         s.reshape(E_loc, C_dec, D // TILE), (1, 1, TILE))
+    else:
+        ffn_in = _take_rows(xq, tok_glob).reshape(E_loc, C_dec, D)
+    n_valid = jnp.sum((local_e_c >= 0).astype(jnp.float32))
+    n_kept = jnp.sum((row_map_exp >= 0).astype(jnp.float32))
+    return ffn_in, row_map_exp, tok_loc, n_valid, n_kept
+
+
+def decode_stage_expert(recipe: Recipe, cfg: MoEConfig, ffn_in, w13, w2,
+                        p_c, row_map_exp, tok_loc, Tc: int):
+    """Stage 'expert FFN' (decode, one chunk): grouped FFN + prob weighting
+    + the LOCAL half of the combine (per-token segment sum).  The returned
+    (Tc, D) f32 partial still needs the cross-rank psum (stage 'combine')."""
+    D = cfg.d_model
+    grouped = ffn_in.data if isinstance(ffn_in, QTensor) else ffn_in
+    E_loc, C_dec = grouped.shape[0], grouped.shape[1]
+    y_exp = expert_ffn(recipe, cfg.act, (), (), ffn_in, w13, w2)
+    p_of_slot = jnp.where(
+        row_map_exp >= 0,
+        p_c.reshape(-1)[jnp.maximum(row_map_exp, 0)], 0.0)
+    y_exp = y_exp * p_of_slot.reshape(E_loc, C_dec)[..., None].astype(
+        y_exp.dtype)
+    seg = jnp.where(tok_loc >= 0, tok_loc, Tc)
+    return jax.ops.segment_sum(
+        y_exp.reshape(E_loc * C_dec, D).astype(jnp.float32), seg,
+        num_segments=Tc + 1)[:Tc]
+
+
+def _decode_pipeline(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
+                     n_chunks: int):
+    """The staged decode program at pipeline depth n_chunks: chunk c-1's
+    combine psum is ISSUED before chunk c's dispatch/expert stages are
+    traced, so the collective is on the wire while the independent FFN
+    compute runs (decode tokens never interact below the combine — chunking
+    the batch is exact, modulo per-chunk capacity C_dec under overflow)."""
     T, D = x.shape
     EP = compat.axis_size(cfg.ep_axis)
     E_loc = cfg.n_experts // EP
     r = jax.lax.axis_index(cfg.ep_axis)
     k = cfg.top_k
+    # divisor-of-T clamping lives in ONE place (DispatchPlan), same as the
+    # train-side moe_block_overlapped
+    n = DispatchPlan(decode_chunks=n_chunks,
+                     min_decode_tokens=1).decode_chunks_for(T)
+    Tc = T // n
+    C_dec = _round_up(max(int(2.0 * Tc * k / cfg.n_experts), 8), 8)
 
-    p, ids, aux = router_topk(x, w_router, k)
-    local = (ids // E_loc) == r                     # (T, k) mine?
-    local_e = jnp.where(local, ids % E_loc, -1).reshape(-1)   # (T*k,)
-    C_dec = _round_up(max(int(2.0 * T * k / cfg.n_experts), 8), 8)
+    p, aux, local_e, xq = decode_stage_router(recipe, cfg, x, w_router, r,
+                                              E_loc)
 
-    row_map_exp, _ = _expert_plan(local_e, E_loc, C_dec)
-    tok_of_slot = jnp.where(row_map_exp >= 0, row_map_exp // k, -1)
+    def partial(c):
+        le = jax.lax.slice_in_dim(local_e, c * Tc * k, (c + 1) * Tc * k)
+        ffn_in, rme, tok_loc, nv, nk = decode_stage_dispatch(
+            recipe, cfg, xq, le, c * Tc, E_loc, C_dec)
+        pc = jax.lax.slice_in_dim(p, c * Tc, (c + 1) * Tc)
+        y_loc = decode_stage_expert(recipe, cfg, ffn_in, w13, w2, pc, rme,
+                                    tok_loc, Tc)
+        return y_loc, nv - nk
 
+    ys = []
+    pend_y, drops = partial(0)
+    for c in range(1, n):
+        # stage 'combine' of chunk c-1 rides the wire while chunk c's
+        # dispatch + expert stages (traced next, independent of it) compute
+        y_prev = jax.lax.psum(pend_y, cfg.ep_axis)
+        pend_y, d_c = partial(c)
+        ys.append(y_prev)
+        drops = drops + d_c
+    ys.append(jax.lax.psum(pend_y, cfg.ep_axis))
     # real drop accounting: each assignment is local to exactly one rank, so
-    # the ones that did not get an expert slot (C_dec overflow) are the drops;
-    # summed over the EP group against the global assignment count T*k.
-    n_valid = jnp.sum((local_e >= 0).astype(jnp.float32))
-    n_kept = jnp.sum((row_map_exp >= 0).astype(jnp.float32))
-    drop_frac = jax.lax.psum(n_valid - n_kept, cfg.ep_axis) / (T * k)
-
-    if recipe.is_fp8:
-        # W8A8 serving path: quantize activations once; weights quantized in
-        # the grouped GEMM (forward-only, no backward dataflow concerns).
-        q = quantize_rowwise(x, scale_mode=recipe.scale_mode, tag="q_entry")
-        d = _take_rows(q.data, tok_of_slot)
-        s = _take_rows(q.scale, tok_of_slot, fill=1.0)
-        ffn_in = QTensor(d.reshape(E_loc, C_dec, D),
-                         s.reshape(E_loc, C_dec, D // TILE), (1, 1, TILE))
-    else:
-        ffn_in = _take_rows(x.astype(jnp.bfloat16), tok_of_slot)
-        ffn_in = ffn_in.reshape(E_loc, C_dec, D)
-
-    y_exp = expert_ffn(recipe, cfg.act, (), (), ffn_in, w13, w2)
-
-    p_of_slot = jnp.where(
-        row_map_exp >= 0,
-        p.reshape(-1)[jnp.maximum(row_map_exp, 0)], 0.0)
-    y_exp = y_exp * p_of_slot.reshape(E_loc, C_dec)[..., None].astype(y_exp.dtype)
-
-    seg = jnp.where(tok_of_slot >= 0, tok_of_slot, T)
-    y = jax.ops.segment_sum(
-        y_exp.reshape(E_loc * C_dec, D).astype(jnp.float32), seg,
-        num_segments=T + 1)[:T]
-    y = jax.lax.psum(y, cfg.ep_axis)
+    # the ones that did not get an expert slot (C_dec overflow) are the
+    # drops; summed over the EP group against the global count T*k.
+    drop_frac = jax.lax.psum(drops, cfg.ep_axis) / (T * k)
+    y = jnp.concatenate(ys, axis=0) if n > 1 else ys[0]
     return y.astype(x.dtype), {"aux_loss": aux, "drop_frac": drop_frac}
+
+
+def moe_block_decode(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
+    """Decode-time EP MoE: the token batch is small (<= a few hundred) and
+    REPLICATED across the ep_axis; each rank computes only its resident
+    experts' tokens and the combine is a psum over ep_axis (vLLM-style EP
+    serving — no all-to-all for tiny batches).  Forward-only (serving).
+    Single synchronous combine (= the staged pipeline at depth 1)."""
+    return _decode_pipeline(recipe, cfg, x, w_router, w13, w2, n_chunks=1)
+
+
+def moe_block_decode_overlapped(recipe: Recipe, cfg: MoEConfig, x, w_router,
+                                w13, w2, n_chunks: int = 2):
+    """Prefetching decode MoE: the staged pipeline at depth n_chunks — the
+    next chunk's router output is consumed (dispatch gather + expert FFN)
+    while the previous chunk's combine psum is in flight, converting the
+    block's synchronous psum into a double-buffered chain.  Per-token math
+    is identical to moe_block_decode when no capacity drops occur (C_dec is
+    per-chunk, so drop SETS can differ under overflow, and the chunk-sized
+    grouped-GEMM shape can wobble the bf16 output by 1 ulp)."""
+    return _decode_pipeline(recipe, cfg, x, w_router, w13, w2,
+                            n_chunks=n_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -464,12 +550,23 @@ class DispatchPlan:
     n_chunks          pipeline depth per MoE layer (1 = fused-message only)
     min_chunk_tokens  never chunk below this many local tokens per chunk
                       (tiny chunks waste collective latency on padding)
+    decode_chunks     pipeline depth for the decode-path EP MoE (the psum
+                      chain of moe_block_decode_overlapped); 1 keeps the
+                      synchronous combine
+    min_decode_tokens decode batches are small — don't pipeline below this
     """
     n_chunks: int = 2
     min_chunk_tokens: int = 64
+    decode_chunks: int = 2
+    min_decode_tokens: int = 8
 
     def chunks_for(self, T: int) -> int:
         cap = max(1, min(self.n_chunks, T // max(self.min_chunk_tokens, 1)))
+        return max(d for d in range(1, cap + 1) if T % d == 0)
+
+    def decode_chunks_for(self, T: int) -> int:
+        cap = max(1, min(self.decode_chunks,
+                         T // max(self.min_decode_tokens, 1)))
         return max(d for d in range(1, cap + 1) if T % d == 0)
 
 

@@ -5,5 +5,6 @@ quantized gradient reduction (e4m3 payload + po2 exponent scales in one
 uint8 message per bucket), FP8-split optimizer state, and ZeRO-1
 scale-aware sharding.  See plan.py for the entry-point `DistPlan`.
 """
-from repro.dist.plan import DistPlan, GradLayout, build_layout  # noqa: F401
+from repro.dist.plan import (DistPlan, GradLayout, build_layout,  # noqa: F401
+                             streaming_fallback_reason)
 from repro.dist.opt_state import StatePolicy  # noqa: F401

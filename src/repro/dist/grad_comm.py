@@ -138,3 +138,21 @@ def wire_param_bytes(n_elems: int, n_shards: int,
     """ZeRO-1 all-gather of updated params (bf16) — same for every wire."""
     P = max(n_shards, 1)
     return (P - 1) / P * n_elems * param_bytes
+
+
+def stream_exposed_us(bucket_us, overlap_us) -> float:
+    """Exposed (unhidden) DP-wire time under the STREAMING schedule.
+
+    bucket_us[i]  modelled wire time of bucket i, in emission order (the
+                  layered layout's reverse-layer order);
+    overlap_us[i] backward compute available AFTER bucket i is issued and
+                  BEFORE bucket i+1 is (i.e. the next layer's backward).
+
+    Greedy hiding: whatever is in flight drains against the next compute
+    window; the return value is the wire time still exposed when the
+    backward runs out of compute — the post-hoc schedule by contrast
+    exposes sum(bucket_us) in full (every byte after the last GEMM)."""
+    inflight = 0.0
+    for b_us, c_us in zip(bucket_us, overlap_us):
+        inflight = max(0.0, inflight + float(b_us) - float(c_us))
+    return inflight

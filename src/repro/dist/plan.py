@@ -16,16 +16,35 @@ this is what lets a ZeRO-1 checkpoint restore onto a different DP mesh.
 Sensitive leaves — norms, biases, router, embeddings, anything tiny or
 1-D — fall back to a bf16 psum: their gradients are high-dynamic-range,
 low-volume, and not worth a quantization error budget.
+
+Layer-aligned (staged) layout
+-----------------------------
+With ``layered=True`` the stacked decoder stacks (``layers`` /
+``dense_layers``, parameters stored (L, ...)) bucketize PER LAYER, in
+REVERSE layer order — exactly the order the staged backward
+(train_step._streamed_grads) emits per-layer gradient leaves.  A slot then
+covers ``leaves[index][layer]`` instead of the whole stacked leaf.  This is
+the layout the ``schedule='stream'`` wire requires: bucket i's pre-agreed-
+scale quantize + reduce-scatter is issued from inside the backward as soon
+as layer i's grads exist, hiding the DP wire behind the remaining backward
+compute.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fp8 import TILE
+
+# Parameter-tree roots whose leaves are stacked (L, ...) over a decoder
+# stack and scanned/unrolled per layer (models/lm.py).  Only these can be
+# layer-aligned; enc/cross stacks ride the legacy trailing buckets (the
+# staged backward does not drive them — see streaming_fallback_reason).
+STACKED_STACKS = ("layers", "dense_layers")
 
 # Leaves that always take the bf16 fallback wire regardless of size: the
 # embedding/unembedding (sparse, outlier-heavy rows), the router (tiny but
@@ -49,6 +68,15 @@ class DistPlan:
                     (dividing it) owns an equal ZeRO-1 shard
     min_fp8_size    leaves smaller than this stay on the bf16 fallback
     policy          optimizer-state dtype policy (dist.opt_state.StatePolicy)
+    schedule        'posthoc' (reduce every bucket after the full backward)
+                    | 'stream' (issue bucket i's quantize+reduce-scatter from
+                    inside the staged backward as soon as layer i's grads
+                    exist — requires layer-aligned buckets)
+    layered         layer-aligned bucketization (see module docstring);
+                    None defaults to (schedule == 'stream').  'posthoc' +
+                    layered=True is the controlled A/B baseline: identical
+                    buckets and quantization groups, only the issue order
+                    differs.
     """
     axis: str = "data"
     mode: str = "zero1"
@@ -57,12 +85,24 @@ class DistPlan:
     shard_multiple: int = 64
     min_fp8_size: int = 2048
     policy: object = None  # None -> StatePolicy() (set in __post_init__)
+    schedule: str = "posthoc"
+    layered: Optional[bool] = None
 
     def __post_init__(self):
         if self.mode not in ("none", "zero1"):
             raise ValueError(f"unknown dist mode {self.mode}")
         if self.wire not in ("fp8", "bf16", "f32"):
             raise ValueError(f"unknown wire format {self.wire}")
+        if self.schedule not in ("posthoc", "stream"):
+            raise ValueError(f"unknown wire schedule {self.schedule}")
+        if self.layered is None:
+            object.__setattr__(self, "layered", self.schedule == "stream")
+        if self.schedule == "stream" and not self.layered:
+            raise ValueError(
+                "schedule='stream' needs layer-aligned buckets "
+                "(layered=True): the streaming backward emits gradients one "
+                "layer at a time, so a bucket spanning layers could only be "
+                "sent after ALL of them — the post-hoc wire in disguise")
         if self.policy is None:
             from repro.dist.opt_state import StatePolicy
             object.__setattr__(self, "policy", StatePolicy())
@@ -80,12 +120,18 @@ class LeafSlot:
     offset_rows: int    # first TILE-row inside the bucket
     rows: int           # ceil(size / TILE)
     size: int           # true element count (tail of the last row is pad)
+    layer: Optional[int] = None     # layered layout: slot covers
+                                    # leaves[index][layer] (one layer's slice
+                                    # of the stacked (L, ...) leaf)
 
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
     rows: int                       # padded: rows % shard_multiple == 0
     slots: Tuple[LeafSlot, ...]
+    stack: Optional[str] = None     # layered layout: owning stack name
+    layer: Optional[int] = None     # layered layout: layer index (all slots
+                                    # share it — buckets never span layers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,8 +170,21 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+class _LayerSlice:
+    """Shape/dtype view of one layer's slice of a stacked (L, ...) leaf —
+    what is_sensitive must judge (per-layer size, per-layer rank)."""
+
+    def __init__(self, leaf):
+        self.shape = tuple(leaf.shape[1:])
+        self.ndim = len(self.shape)
+        self.size = math.prod(self.shape) if self.shape else 1
+        self.dtype = leaf.dtype
+
+
 def build_layout(params, plan: DistPlan) -> GradLayout:
     """Pure-static: consumes only shapes/paths (safe on tracers)."""
+    if plan.layered:
+        return _build_layout_layered(params, plan)
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     buckets, slots, sensitive = [], [], []
     cur_rows = 0
@@ -154,15 +213,101 @@ def build_layout(params, plan: DistPlan) -> GradLayout:
                       n_leaves=len(flat))
 
 
+def _build_layout_layered(params, plan: DistPlan) -> GradLayout:
+    """Layer-aligned bucketization: one bucket chain per (stack, layer),
+    emitted in the staged backward's order — main stack last-layer-first,
+    then the dense prologue last-first, then any non-stacked FP8 leaves in
+    legacy packing.  Buckets NEVER span a layer boundary, so each one can be
+    put on the wire the moment its layer's backward completes."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    target_rows = max(int(plan.bucket_mb * 2 ** 20) // TILE,
+                      plan.shard_multiple)
+    buckets, sensitive = [], []
+    stacks = {name: [] for name in STACKED_STACKS}
+    other = []
+    for i, (path, leaf) in enumerate(flat):
+        p = path_str(path)
+        root = p.split(".")[0]
+        (stacks[root] if root in stacks else other).append((i, p, leaf))
+
+    def pack(entries, stack=None, layer=None):
+        slots, cur = [], 0
+        for i, p, size in entries:
+            rows = -(-size // TILE)
+            if cur and cur + rows > target_rows:
+                buckets.append(Bucket(
+                    rows=_round_up(cur, plan.shard_multiple),
+                    slots=tuple(slots), stack=stack, layer=layer))
+                slots, cur = [], 0
+            slots.append(LeafSlot(index=i, path=p, offset_rows=cur,
+                                  rows=rows, size=size, layer=layer))
+            cur += rows
+        if slots:
+            buckets.append(Bucket(rows=_round_up(cur, plan.shard_multiple),
+                                  slots=tuple(slots), stack=stack,
+                                  layer=layer))
+
+    # backward emission order: main stack reversed, then the dense prologue
+    # reversed (the staged backward walks layers last-to-first)
+    for name in ("layers", "dense_layers"):
+        group = stacks.get(name) or []
+        eligible = []
+        for i, p, leaf in group:
+            view = _LayerSlice(leaf)
+            if is_sensitive(p, view, plan):
+                sensitive.append((i, p))     # reduced as the FULL stacked leaf
+            else:
+                eligible.append((i, p, view.size))
+        if eligible:
+            n_layers = group[0][2].shape[0]
+            for l in range(n_layers - 1, -1, -1):
+                pack(eligible, stack=name, layer=l)
+    tail = []
+    for i, p, leaf in other:
+        if is_sensitive(p, leaf, plan):
+            sensitive.append((i, p))
+        else:
+            tail.append((i, p, leaf.size))
+    pack(tail)
+    return GradLayout(buckets=tuple(buckets), sensitive=tuple(sensitive),
+                      n_leaves=len(flat))
+
+
+def streaming_fallback_reason(cfg, layout: Optional[GradLayout] = None,
+                              grad_accum: int = 1) -> Optional[str]:
+    """Why the streaming wire schedule cannot run this configuration (None
+    when it can).  Callers either raise (make_train_step — fast clear error)
+    or fall back to the post-hoc schedule with a warning (launch/train.py)
+    instead of miscompiling."""
+    if getattr(cfg, "encdec", False) or getattr(cfg, "frontend", "none") != "none":
+        return ("the staged layer program drives plain decoder-only stacks; "
+                "encoder-decoder / frontend architectures keep the post-hoc "
+                "wire")
+    if grad_accum > 1:
+        return ("grad_accum > 1 would put every bucket on the wire once per "
+                "microbatch; stream only supports grad_accum == 1")
+    if layout is not None:
+        if not layout.buckets:
+            return "no FP8-eligible leaves to bucket (nothing to stream)"
+        off = [b for b in layout.buckets if b.layer is None]
+        if off:
+            return (f"{len(off)} bucket(s) hold non-stacked leaves and "
+                    f"cannot align to layer boundaries "
+                    f"(e.g. {off[0].slots[0].path})")
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Flat-space <-> tree movement (runs inside jit; layout is static).
 # ---------------------------------------------------------------------------
-def bucket_flat(bucket: Bucket, leaves, dtype=jnp.float32) -> jax.Array:
-    """Gather a bucket's leaves into its (rows, TILE) flat block, zero-padded
-    at each slot's row tail and at the bucket tail."""
+def bucket_flat_parts(bucket: Bucket, get_leaf, dtype=jnp.float32) -> jax.Array:
+    """Gather a bucket into its (rows, TILE) flat block, zero-padded at each
+    slot's row tail and at the bucket tail.  `get_leaf(slot)` supplies each
+    slot's (already layer-sliced, if applicable) array — the streaming
+    backward feeds per-layer vjp outputs here directly."""
     parts = []
     for s in bucket.slots:
-        x = leaves[s.index].reshape(-1).astype(dtype)
+        x = get_leaf(s).reshape(-1).astype(dtype)
         pad = s.rows * TILE - s.size
         if pad:
             x = jnp.pad(x, (0, pad))
@@ -174,12 +319,28 @@ def bucket_flat(bucket: Bucket, leaves, dtype=jnp.float32) -> jax.Array:
     return flat.reshape(bucket.rows, TILE)
 
 
+def bucket_flat(bucket: Bucket, leaves, dtype=jnp.float32) -> jax.Array:
+    """bucket_flat_parts over a full flattened-params leaf list (layered
+    slots take the slot's layer slice of the stacked leaf)."""
+    return bucket_flat_parts(
+        bucket,
+        lambda s: leaves[s.index] if s.layer is None
+        else leaves[s.index][s.layer],
+        dtype)
+
+
 def bucket_scatter(bucket: Bucket, flat: jax.Array, like_leaves) -> dict:
-    """Slice a bucket's (rows, TILE) flat block back into {index: leaf}."""
+    """Slice a bucket's (rows, TILE) flat block back into leaf pieces.
+
+    Returns {index: leaf} for flat-layout slots and {(index, layer): slice}
+    for layered slots — the caller stacks a layered leaf's L pieces back
+    into its (L, ...) array (train_step does this once per step)."""
     v = flat.reshape(-1)
     out = {}
     for s in bucket.slots:
         ref = like_leaves[s.index]
+        shape = ref.shape if s.layer is None else ref.shape[1:]
         x = v[s.offset_rows * TILE:s.offset_rows * TILE + s.size]
-        out[s.index] = x.reshape(ref.shape).astype(ref.dtype)
+        key = s.index if s.layer is None else (s.index, s.layer)
+        out[key] = x.reshape(shape).astype(ref.dtype)
     return out

@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek_v2_lite \
       --recipe fp8_flow --steps 100 [--reduced] [--ckpt-dir DIR] \
-      [--elastic] [--dist-wire fp8]
+      [--elastic] [--dist-wire fp8] [--dist-schedule stream]
 
 On a real TPU fleet this process runs once per host under
 `jax.distributed.initialize()`; on this container use --reduced for an
@@ -13,8 +13,18 @@ executable configuration (full configs are exercised via launch.dryrun).
 optimizer state.  It replaces the old implicit pjit-psum reduction (and the
 never-wired --compress-pod-grads flag).  The wire needs a DP-only mesh, so
 with --reduced the test mesh spans every visible device on the data axis.
+
+--dist-schedule {posthoc,stream} picks WHEN the wire runs: 'posthoc'
+reduces every bucket after the full backward; 'stream' aligns buckets to
+layer boundaries and issues each bucket's quantize + reduce-scatter from
+inside the staged backward the moment its layer's grads exist, hiding the
+DP wire behind the remaining backward compute.  When the configuration
+cannot stream (encoder-decoder arch, grad accumulation, buckets that do
+not align to layer boundaries) the launcher warns and falls back to
+'posthoc' instead of miscompiling.
 """
 import argparse
+import dataclasses
 
 import jax
 
@@ -47,9 +57,15 @@ def main():
     ap.add_argument("--dist-wire", default="off",
                     choices=["off", "fp8", "bf16", "f32"],
                     help="explicit DP gradient wire + ZeRO-1 (repro.dist)")
+    ap.add_argument("--dist-schedule", default="posthoc",
+                    choices=["posthoc", "stream"],
+                    help="reduce buckets after the backward (posthoc) or "
+                         "stream them out of the staged backward in reverse "
+                         "layer order (stream)")
     args = ap.parse_args()
 
-    dist = DistPlan(wire=args.dist_wire) if args.dist_wire != "off" else None
+    dist = DistPlan(wire=args.dist_wire, schedule=args.dist_schedule) \
+        if args.dist_wire != "off" else None
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -73,17 +89,30 @@ def main():
     if dist is not None:
         n_dp = mesh.shape[dist.axis]
         n = cfg.n_params()
-        print(f"[train] dist wire={dist.wire} zero1 over '{dist.axis}' "
+        print(f"[train] dist wire={dist.wire} schedule={dist.schedule} "
+              f"zero1 over '{dist.axis}' "
               f"x{n_dp}: ~{wire_grad_bytes(n, n_dp, dist.wire)/2**20:.0f} "
               f"MiB grad bytes/step/device "
               f"(bf16 all-reduce: {wire_grad_bytes(n, n_dp, 'bf16', 'none')/2**20:.0f} MiB)")
 
     recipe = get_recipe(args.recipe)
     opt = AdamWConfig(lr=args.lr)
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
+    if dist is not None and dist.schedule == "stream":
+        # fast clear fallback: if the layout's buckets cannot align to layer
+        # boundaries (or the config cannot stream), warn and run post-hoc —
+        # the layered layout is kept, so the ZeRO-1 state stays valid
+        from repro.dist import build_layout, streaming_fallback_reason
+        # grad_accum=1 matches the step built below (make_train_step default)
+        reason = streaming_fallback_reason(
+            cfg, build_layout(state["params"], dist), grad_accum=1)
+        if reason:
+            print(f"[train] WARNING: streaming wire unavailable ({reason}); "
+                  f"falling back to the post-hoc schedule")
+            dist = dataclasses.replace(dist, schedule="posthoc")
     step = jax.jit(make_train_step(cfg, recipe, plan, opt, dist=dist,
                                    total_steps=args.steps,
                                    warmup_steps=max(args.steps // 10, 1)))
-    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                       global_batch=args.global_batch)
     elastic = ElasticTrainer(n_data_shards=mesh.shape["data"]) \

@@ -1,11 +1,25 @@
 """Transformer layer primitives: norms, RoPE, blocked (flash-style) attention
 with GQA / sliding-window / logit-softcap / qk-norm, and cache-decode
 attention.  Pure JAX; attention stays BF16 in every recipe (the paper's FP8
-scope is the MoE/MLP stage)."""
+scope is the MoE/MLP stage).
+
+Staged layer program: each decoder layer decomposes into the named stages
+
+    attn -> router -> dispatch -> expert -> combine     (MoE layers)
+    attn -> ffn                                         (dense layers)
+
+`stage_ln_attn` below is the 'attn' stage (pre-norm + mixer + residual);
+the MoE stages live in core/moe.py (decode_stage_router / _dispatch /
+_expert + the combine psum/a2a) and models/lm.py drives them — either
+fused inside the monolithic scan (`_run_stack`) or unrolled with a
+two-layer carry window (`_run_stack_unrolled` / the streaming dist
+backward) so work can be issued across layer and stage boundaries."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+LAYER_STAGES = ("attn", "router", "dispatch", "expert", "combine")
 
 NEG_INF = -1e30
 
@@ -311,6 +325,17 @@ def project_qkv(cfg, p, x, positions, cross_kv=None):
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
+
+
+def stage_ln_attn(cfg, p, x, *, positions, layer_window=0, cache=None,
+                  cache_pos=None, causal=True, plan=None):
+    """Named stage 'attn' for pure-attention layer kinds: pre-norm +
+    attention + residual add.  Returns (x + attn_out, new_cache)."""
+    h = apply_norm(cfg.norm, x, p, "ln1")
+    out, new_cache = attn_block(cfg, p, h, positions=positions,
+                                layer_window=layer_window, cache=cache,
+                                cache_pos=cache_pos, causal=causal, plan=plan)
+    return x + out, new_cache
 
 
 def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,

@@ -21,10 +21,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.linear import dense_mlp, expert_ffn, quantize_entry
 from repro.core.moe import (DispatchPlan, MoEConfig, moe_block,
-                            moe_block_decode, moe_block_overlapped,
-                            moe_block_tp)
+                            moe_block_decode, moe_block_decode_overlapped,
+                            moe_block_overlapped, moe_block_tp)
 from repro.core.recipes import Recipe
-from repro.models.layers import apply_norm, attn_block
+from repro.models.layers import apply_norm, attn_block, stage_ln_attn
 from repro.models.ssm import mamba2_block
 
 
@@ -49,7 +49,16 @@ class ParallelPlan:
                                    # moe_block_overlapped and the shared
                                    # expert is issued BEFORE the dispatch so
                                    # its GEMMs overlap the first chunk's
-                                   # fused all-to-all
+                                   # fused all-to-all; decode-path MoE layers
+                                   # run moe_block_decode_overlapped (the
+                                   # chunk-pipelined combine psum)
+    stage_layers: bool = False     # run the decoder stacks through the
+                                   # UNROLLED staged layer program
+                                   # (_run_stack_unrolled) instead of the
+                                   # monolithic lax.scan: per-layer trace
+                                   # regions with a two-layer carry window —
+                                   # what the streaming DP wire's backward
+                                   # consumes (repro.dist schedule='stream')
 
     @property
     def token_axes_moe(self):      # EP: tokens also sharded over tp (SP)
@@ -57,6 +66,11 @@ class ParallelPlan:
 
 
 NO_PLAN = ParallelPlan(mesh=None, dp_axes=(), shard_map_mlp=False)
+
+# weight of the summed router aux losses in the training loss — shared by
+# forward() and the staged backward (train_step._streamed_grads), which
+# feeds it in as each layer's aux cotangent
+AUX_LOSS_COEF = 0.01
 
 
 # ---------------------------------------------------------------------------
@@ -344,14 +358,17 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
             y, m = moe_block_tp(recipe, mcfg, xf, wr_l, we13_r, we2_l,
                                 tp_axis=plan.tp_axis,
                                 combine_mode=plan.moe_tp_combine)
+        elif plan.moe_overlap is not None:
+            # prefetching decode path: chunk c+1's router/dispatch/expert
+            # stages run while chunk c's combine psum is on the wire
+            y, m = moe_block_decode_overlapped(
+                recipe, mcfg, xf, wr_l, we13_r, we2_l,
+                n_chunks=plan.moe_overlap.decode_chunks_for(xf.shape[0]))
         else:
             y, m = moe_block_decode(recipe, mcfg, xf, wr_l, we13_r, we2_l)
         # aux loss leaves the shard_map as a per-shard (1,) array; the mean
         # happens outside (robust to size-1 mesh axes in the vma system)
         aux = m["aux_loss"][None]
-        if plan.tp_axis:  # reduce the seq-shard variation inside
-            aux = jax.lax.pmean(aux, plan.tp_axis) \
-                if False else aux
         return y, aux
 
     if mode == "ep":
@@ -461,28 +478,34 @@ def _axes_prod(plan):
 def _sub_layer(cfg, recipe, plan, kind, moe_layer, p, x, positions,
                cache=None, cache_pos=None, ssm_state=None, conv_state=None,
                causal=True):
-    """One transformer layer.  Returns (x, aux, new_cache, new_ssm, new_conv)."""
+    """One transformer layer.  Returns (x, aux, new_cache, new_ssm, new_conv).
+
+    Staged decomposition (models/layers.LAYER_STAGES): stage 'attn' is
+    stage_ln_attn (pure-attention kinds) or the mixer fan-out below; the MoE
+    stages (router -> dispatch -> expert -> combine) run inside _moe_stage /
+    core.moe."""
     aux = jnp.float32(0.0)
-    h = apply_norm(cfg.norm, x, p, "ln1")
     new_cache, new_ssm, new_conv = None, None, None
     decode = cache is not None or ssm_state is not None
 
     if kind == "ssm":
+        h = apply_norm(cfg.norm, x, p, "ln1")
         mix, new_ssm, new_conv = mamba2_block(
             cfg, p, h, state=ssm_state, conv_state=conv_state, decode=decode)
+        x = x + mix
     elif kind == "hybrid":
+        h = apply_norm(cfg.norm, x, p, "ln1")
         attn_out, new_cache = attn_block(
             cfg, p, h, positions=positions, layer_window=0, cache=cache,
             cache_pos=cache_pos, causal=causal, plan=plan)
         ssm_out, new_ssm, new_conv = mamba2_block(
             cfg, p, h, state=ssm_state, conv_state=conv_state, decode=decode)
-        mix = 0.5 * (attn_out + ssm_out)
+        x = x + 0.5 * (attn_out + ssm_out)
     else:
         window = cfg.window if kind == "local" else 0
-        mix, new_cache = attn_block(
-            cfg, p, h, positions=positions, layer_window=window, cache=cache,
+        x, new_cache = stage_ln_attn(
+            cfg, p, x, positions=positions, layer_window=window, cache=cache,
             cache_pos=cache_pos, causal=causal, plan=plan)
-    x = x + mix
 
     if kind == "ssm" and not cfg.d_ff:      # mamba2: mixer-only blocks
         x = _residual_constraint(plan, x, decode=decode)
@@ -507,10 +530,8 @@ def _run_stack(cfg, recipe, plan, stack_params, pattern, n_layers, moe, x,
     """Scan over a homogeneous stack of layers, pattern-grouped: the stack is
     reshaped (n_groups, len(pattern), ...) and the pattern is unrolled inside
     the (remat'd) scan body — e.g. gemma3's 5 local + 1 global per group."""
+    pattern = _pattern_or_fallback(pattern, n_layers)
     glen = len(pattern)
-    if n_layers % glen:
-        glen = 1
-        pattern = (pattern[0],)
     ng = n_layers // glen
 
     def group_body(carry, pslice):
@@ -528,6 +549,87 @@ def _run_stack(cfg, recipe, plan, stack_params, pattern, n_layers, moe, x,
     grouped = jax.tree.map(
         lambda a: a.reshape(ng, glen, *a.shape[1:]), stack_params)
     (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), grouped)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Staged layer program: the unrolled stack driver + per-layer iteration the
+# streaming DP wire (train/train_step._streamed_grads) drives directly.
+# ---------------------------------------------------------------------------
+def layer_forward(cfg, recipe, plan, kind, moe_layer, p, x, positions,
+                  causal=True):
+    """One decoder layer of the staged program (train/prefill path):
+    stage 'attn', then the MLP/MoE stages (router -> dispatch -> expert ->
+    combine inside core.moe).  Returns (x_out, aux) — the differentiable
+    unit the per-layer backward emits gradients for."""
+    out, aux, _, _, _ = _sub_layer(cfg, recipe, plan, kind, moe_layer, p, x,
+                                   positions, causal=causal)
+    return out, aux
+
+
+def _pattern_or_fallback(pattern, n_layers: int):
+    """THE single copy of the kind-sequence fallback rule: a pattern whose
+    length does not divide the stack depth degrades to its first kind.
+    Every stack driver (scan, unrolled, per-layer iteration) derives its
+    kinds through here, so the staged backward's layer kinds can never
+    desynchronize from the forward's."""
+    return pattern if n_layers % len(pattern) == 0 else (pattern[0],)
+
+
+def stack_patterns(cfg: ArchConfig):
+    """(dense_pattern, main_pattern) as every stack driver resolves them."""
+    nd = cfg.n_dense_layers if cfg.moe else 0
+    return (cfg.pattern[0],), _pattern_or_fallback(cfg.pattern,
+                                                   cfg.n_layers - nd)
+
+
+def iter_layer_slices(cfg: ArchConfig, params):
+    """Static per-layer walk of the stacked decoder stacks in forward order:
+    yields (stack_name, layer_index, kind, moe_layer, per-layer params).
+    The kind sequence matches _run_stack's pattern grouping exactly, so the
+    staged and scanned forwards compute the same function."""
+    nd = cfg.n_dense_layers if cfg.moe else 0
+    dense_pat, main_pat = stack_patterns(cfg)
+    if nd and "dense_layers" in params:
+        for l in range(nd):
+            yield ("dense_layers", l, dense_pat[l % len(dense_pat)], False,
+                   jax.tree.map(lambda a, _l=l: a[_l],
+                                params["dense_layers"]))
+    for j in range(cfg.n_layers - nd):
+        yield ("layers", j, main_pat[j % len(main_pat)], cfg.moe,
+               jax.tree.map(lambda a, _j=j: a[_j], params["layers"]))
+
+
+def _run_stack_unrolled(cfg, recipe, plan, stack_params, pattern, n_layers,
+                        moe, x, positions, causal=True):
+    """Staged (unrolled) stack driver: same math as _run_stack, but each
+    layer is its own trace region with a TWO-LAYER CARRY WINDOW — layer L's
+    scalar epilogue (the aux-loss landing) is deferred until after layer
+    L+1's attn/router/dispatch stages have been issued, and the backward of
+    the unrolled program emits per-layer gradient leaves in reverse layer
+    order (what the streaming DP wire consumes).  The residual stream
+    itself is strictly sequential; the real cross-layer overlap lives in
+    the stage pipelines it enables (the chunked dispatch a2a and the
+    decode combine-psum chain in core/moe.py)."""
+    pattern = _pattern_or_fallback(pattern, n_layers)
+    aux = jnp.float32(0.0)
+    pending = None                  # the two-layer window's deferred scalar
+    for l in range(n_layers):
+        p_l = jax.tree.map(lambda a, _l=l: a[_l], stack_params)
+        kind = pattern[l % len(pattern)]
+
+        def f(p, xc, _kind=kind):
+            return layer_forward(cfg, recipe, plan, _kind, moe, p, xc,
+                                 positions, causal=causal)
+
+        if cfg.remat:
+            f = jax.checkpoint(f, prevent_cse=False)
+        x, a = f(p_l, x)
+        if pending is not None:     # layer l-1's epilogue lands only now,
+            aux = aux + pending     # after layer l's stages were issued
+        pending = a
+    if pending is not None:
+        aux = aux + pending
     return x, aux
 
 
@@ -626,18 +728,21 @@ def forward(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
                          "final_norm")
         cross_kv_src = enc
 
+    # staged (unrolled, two-layer window) vs monolithic-scan stack driver
+    run_stack = _run_stack_unrolled if plan.stage_layers else _run_stack
+
     nd = cfg.n_dense_layers if cfg.moe else 0
     if nd:
-        x, aux_d = _run_stack(cfg, recipe, plan, params["dense_layers"],
-                              (cfg.pattern[0],), nd, False, x, positions)
+        x, aux_d = run_stack(cfg, recipe, plan, params["dense_layers"],
+                             (cfg.pattern[0],), nd, False, x, positions)
         aux_total += aux_d
 
     if cfg.encdec:
         x, aux_m = _run_encdec_decoder(cfg, recipe, plan, params, x,
                                        positions, cross_kv_src)
     else:
-        x, aux_m = _run_stack(cfg, recipe, plan, params["layers"], cfg.pattern,
-                              cfg.n_layers - nd, cfg.moe, x, positions)
+        x, aux_m = run_stack(cfg, recipe, plan, params["layers"], cfg.pattern,
+                             cfg.n_layers - nd, cfg.moe, x, positions)
     aux_total += aux_m
 
     x = apply_norm(cfg.norm, x, {"final_norm_s": params["final_norm_s"],
@@ -650,7 +755,7 @@ def forward(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
     if not compute_loss:
         return logits, metrics
     mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
-    loss = _xent(logits, batch["targets"], mask) + 0.01 * aux_total
+    loss = _xent(logits, batch["targets"], mask) + AUX_LOSS_COEF * aux_total
     metrics["loss"] = loss
     return loss, metrics
 

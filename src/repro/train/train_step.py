@@ -72,25 +72,139 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
 
 
 def _local_grads(loss_fn, params, batch, grad_accum):
-    """value+grad, optionally scanning a leading grad-accum batch axis."""
+    """value+grad, optionally scanning a leading grad-accum batch axis.
+    Forward metrics are accumulated across microbatches and averaged, the
+    same way the loss is — they used to be silently dropped."""
     if grad_accum > 1:
         def acc_body(carry, mb):
             gsum, lsum = carry
-            (loss, _), g = jax.value_and_grad(
+            (loss, metrics), g = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mb)
             gsum = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), gsum, g)
-            return (gsum, lsum + loss), None
+            return (gsum, lsum + loss), metrics
 
         g0 = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0.0)),
-                                       batch)
+        (gsum, lsum), ms = jax.lax.scan(acc_body, (g0, jnp.float32(0.0)),
+                                        batch)
         grads = jax.tree.map(lambda g: g / grad_accum, gsum)
-        return lsum / grad_accum, {}, grads
+        metrics = jax.tree.map(lambda a: jnp.mean(a, axis=0), ms)
+        return lsum / grad_accum, metrics, grads
     (loss, metrics), grads = jax.value_and_grad(
         loss_fn, has_aux=True)(params, batch)
     return loss, metrics, grads
+
+
+# ---------------------------------------------------------------------------
+# The staged layer program's streaming step: manual per-layer forward (each
+# layer's vjp saved), then a reverse-order backward that quantizes and
+# reduce-scatters each layer's gradient bucket(s) AS SOON AS that layer's
+# vjp has produced them — the DP wire rides behind the remaining backward
+# compute instead of waiting for all of it (DistPlan schedule='stream').
+# ---------------------------------------------------------------------------
+def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
+                    wire):
+    """Returns (loss, metrics, owned, sens_raw): `owned` aligns with
+    layout.buckets (the layered, reverse-layer-order layout) and holds each
+    bucket's already-reduced f32 shard; `sens_raw` maps a sensitive leaf's
+    flatten index to its (full, stacked) local gradient, reduced by the
+    caller on the bf16 fallback wire exactly as the post-hoc path does."""
+    from repro.dist import grad_comm
+    from repro.dist.plan import bucket_flat_parts, path_str
+    from repro.models.layers import apply_norm
+    from repro.models.lm import (AUX_LOSS_COEF, _embed_tokens, _lm_logits,
+                                 _xent, iter_layer_slices, layer_forward)
+
+    tokens, targets = batch["tokens"], batch["targets"]
+    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+
+    # static maps: full-tree flatten index -> position in each stack's
+    # per-layer subtree flatten order (subtree traversal is the same sorted
+    # dict walk, so relative order matches)
+    flatpaths = jax.tree_util.tree_flatten_with_path(params)[0]
+    by_path = {path_str(pth): i for i, (pth, _) in enumerate(flatpaths)}
+    stack_pos = {}
+    for s in ("dense_layers", "layers"):
+        idxs = [i for i, (pth, _) in enumerate(flatpaths)
+                if path_str(pth).split(".")[0] == s]
+        stack_pos[s] = {i: j for j, i in enumerate(idxs)}
+    layer_buckets = {}
+    for bi, b in enumerate(layout.buckets):
+        layer_buckets.setdefault((b.stack, b.layer), []).append((bi, b))
+    sens_idx = {i for i, _ in layout.sensitive}
+
+    # ---- staged forward (unrolled; the two-layer carry window defers each
+    # layer's scalar epilogue past the next layer's issue) -----------------
+    x, emb_vjp = jax.vjp(
+        lambda e: _embed_tokens(cfg, {"embed": e}, tokens), params["embed"])
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    recs = []                       # (stack, layer, vjp) in forward order
+    aux_total = jnp.float32(0.0)
+    pending = None
+    for stack, l, kind, moe, p_l in iter_layer_slices(cfg, params):
+        def f(p, xc, _kind=kind, _moe=moe):
+            return layer_forward(cfg, recipe, lplan, _kind, _moe, p, xc,
+                                 positions)
+
+        if cfg.remat:
+            f = jax.checkpoint(f, prevent_cse=False)
+        (x, a), vjp_l = jax.vjp(f, p_l, x)
+        recs.append((stack, l, vjp_l))
+        if pending is not None:
+            aux_total = aux_total + pending
+        pending = a
+    if pending is not None:
+        aux_total = aux_total + pending
+
+    hp = {"final_norm_s": params["final_norm_s"]}
+    if "final_norm_b" in params:
+        hp["final_norm_b"] = params["final_norm_b"]
+    hp["embed" if cfg.tie_embeddings else "lm_head"] = \
+        params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+    def head_f(hp_, xf):
+        xn = apply_norm(cfg.norm, xf,
+                        {"final_norm_s": hp_["final_norm_s"],
+                         "final_norm_b": hp_.get("final_norm_b")},
+                        "final_norm")
+        return _xent(_lm_logits(cfg, hp_, xn, None), targets, mask)
+
+    xent_loss, head_vjp = jax.vjp(head_f, hp, x)
+    loss = xent_loss + AUX_LOSS_COEF * aux_total
+
+    # ---- streaming backward: reverse layer order, wire-on-the-way --------
+    g_hp, g_x = head_vjp(jnp.float32(1.0))
+    owned = [None] * len(layout.buckets)
+    sens_parts = {}                 # full index -> {layer: grad slice}
+    g_aux = jnp.float32(AUX_LOSS_COEF)      # d loss / d aux_l
+    for stack, l, vjp_l in reversed(recs):
+        g_pl, g_x = vjp_l((g_x, g_aux))
+        g_leaves = jax.tree.leaves(g_pl)
+        pos = stack_pos[stack]
+        for bi, b in layer_buckets.get((stack, l), ()):
+            flat = bucket_flat_parts(b, lambda s: g_leaves[pos[s.index]])
+            # issued HERE, between layer l's and layer l-1's backward GEMMs:
+            # the pre-agreed-scale quantize + single-uint8-message RS
+            owned[bi] = grad_comm.reduce_scatter_bucket(flat, axis, n_dp,
+                                                        wire)
+        for i in pos:
+            if i in sens_idx:
+                sens_parts.setdefault(i, {})[l] = g_leaves[pos[i]]
+
+    g_embed = emb_vjp(g_x)[0]
+    if cfg.tie_embeddings:
+        g_embed = g_embed + g_hp["embed"].astype(g_embed.dtype)
+    sens_raw = {i: jnp.stack([pieces[l] for l in range(len(pieces))])
+                for i, pieces in sens_parts.items()}
+    sens_raw[by_path["embed"]] = g_embed
+    sens_raw[by_path["final_norm_s"]] = g_hp["final_norm_s"]
+    if "final_norm_b" in by_path:
+        sens_raw[by_path["final_norm_b"]] = g_hp["final_norm_b"]
+    if not cfg.tie_embeddings:
+        sens_raw[by_path["lm_head"]] = g_hp["lm_head"]
+    metrics = {"aux_loss": aux_total, "loss": loss}
+    return loss, metrics, owned, sens_raw
 
 
 # ---------------------------------------------------------------------------
@@ -103,12 +217,20 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
     from repro.compat import shard_map
     from repro.dist import grad_comm
     from repro.dist import opt_state as ost
-    from repro.dist.plan import bucket_flat, bucket_scatter, build_layout
+    from repro.dist.plan import (bucket_flat, bucket_scatter, build_layout,
+                                 streaming_fallback_reason)
 
     mesh = plan.mesh
     if mesh is None or dist.axis not in mesh.axis_names:
         raise ValueError(f"DistPlan needs a plan.mesh with axis "
                          f"'{dist.axis}'; got {mesh}")
+    if dist.schedule == "stream":
+        reason = streaming_fallback_reason(cfg, grad_accum=grad_accum)
+        if reason:
+            raise ValueError(
+                f"DistPlan schedule='stream' cannot run: {reason} — use "
+                f"schedule='posthoc' (launch/train.py falls back "
+                f"automatically)")
     n_dp = mesh.shape[dist.axis]
     nontrivial = [a for a in mesh.axis_names
                   if a != dist.axis and mesh.shape[a] != 1]
@@ -139,19 +261,35 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
         params = state["params"]
         layout = build_layout(params, dist)     # static (shapes only)
         treedef = jax.tree.structure(params)
+        if dist.schedule == "stream":
+            reason = streaming_fallback_reason(cfg, layout, grad_accum)
+            if reason:
+                raise ValueError(
+                    f"DistPlan schedule='stream' cannot run: {reason}")
 
         def body(params, opt_st, batch):
-            loss, fwd_metrics, grads = _local_grads(loss_fn, params, batch,
-                                                    grad_accum)
             pleaves = treedef.flatten_up_to(params)
-            gleaves = treedef.flatten_up_to(grads)
+            if dist.schedule == "stream":
+                # staged layer program: per-layer backward, bucket i's
+                # quantize + reduce-scatter issued the moment layer i's
+                # grads exist (reverse layer order) — the DP wire hides
+                # behind the remaining backward compute
+                loss, fwd_metrics, owned, sens_raw = _streamed_grads(
+                    cfg, recipe, local_plan, params, batch, layout, axis,
+                    n_dp, dist.wire)
+            else:
+                loss, fwd_metrics, grads = _local_grads(
+                    loss_fn, params, batch, grad_accum)
+                gleaves = treedef.flatten_up_to(grads)
 
-            # quantized reduce-scatter: one fused uint8 message per bucket,
-            # scales pre-agreed (scale_sync) so the sum never re-quantizes
-            owned = [grad_comm.reduce_scatter_bucket(
-                bucket_flat(b, gleaves), axis, n_dp, dist.wire)
-                for b in layout.buckets]
-            sens_g = {p: grad_comm.reduce_sensitive(gleaves[i], axis, n_dp,
+                # quantized reduce-scatter: one fused uint8 message per
+                # bucket, scales pre-agreed (scale_sync) so the sum never
+                # re-quantizes
+                owned = [grad_comm.reduce_scatter_bucket(
+                    bucket_flat(b, gleaves), axis, n_dp, dist.wire)
+                    for b in layout.buckets]
+                sens_raw = {i: gleaves[i] for i, _ in layout.sensitive}
+            sens_g = {p: grad_comm.reduce_sensitive(sens_raw[i], axis, n_dp,
                                                     dist.wire)
                       for i, p in layout.sensitive}
 
@@ -172,7 +310,7 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 warmup_steps=warmup_steps)
 
             # ZeRO-1: update the owned shard, all-gather bf16 param shards
-            new_leaves, new_flat = {}, []
+            new_leaves, stacked_new, new_flat = {}, {}, []
             for b, o_g, st_b in zip(layout.buckets, owned, opt_st["flat"]):
                 shard32 = None
                 if "master" not in st_b:
@@ -190,8 +328,16 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 new_shard, new_st = ost.flat_bucket_update(
                     opt, pol, st_b, o_g, clip, lr, b1c, b2c, shard32)
                 full = grad_comm.all_gather_shard(new_shard, axis)
-                new_leaves.update(bucket_scatter(b, full, pleaves))
+                for key, piece in bucket_scatter(b, full, pleaves).items():
+                    if isinstance(key, tuple):      # layered: (index, layer)
+                        stacked_new.setdefault(key[0], {})[key[1]] = piece
+                    else:
+                        new_leaves[key] = piece
                 new_flat.append(new_st)
+            # layered buckets update one layer slice at a time; restack them
+            for i, pieces in stacked_new.items():
+                new_leaves[i] = jnp.stack(
+                    [pieces[l] for l in range(pleaves[i].shape[0])])
 
             # sensitive leaves: replicated classic update (f32 state)
             sens_st = opt_st["sens"]

@@ -97,3 +97,45 @@ def test_naive_has_double_quant_sites():
         jax.grad(L, argnums=(0, 1, 2))(*args)
     tags = [e.tag for e in led.events if e.kind == "dequantize"]
     assert "dq_transpose" in tags
+
+
+def test_staged_streaming_backward_stays_two_casts():
+    """The staged per-layer backward (DistPlan schedule='stream') keeps
+    fp8_flow's Fig.-2 dataflow: per layer, ONE entry quantize (counted once
+    more by the remat recompute trace) and ONE backward island quantize —
+    no new explicit cast sites, no explicit dequantize; every wire/state
+    quantize stays fused-kind."""
+    from repro.compat import make_mesh
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.dist import DistPlan
+    from repro.models.lm import ParallelPlan
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=1e-3)
+    recipe = get_recipe("fp8_flow")
+    dist = DistPlan(wire="fp8", schedule="stream")
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
+    step = make_train_step(cfg, recipe, plan, opt, dist=dist,
+                           total_steps=10, warmup_steps=2)
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    with mesh, casts.ledger() as led:
+        jax.jit(step)(state, make_batch(data, 0))
+    by = led.by_tag()
+    # the unrolled program has n_layers trace sites: one island quantize per
+    # layer backward, one entry quantize per layer forward + one per remat
+    # recompute — nothing else on the activation path
+    assert by.get(("quantize", "q_bwd_island"), 0) == cfg.n_layers, by
+    expected_entry = cfg.n_layers * (2 if cfg.remat else 1)
+    assert by.get(("quantize", "q_entry"), 0) == expected_entry, by
+    tags = {t for (k, t) in by
+            if k in ("quantize", "dequantize") and not t.startswith("q_w")}
+    assert tags == {"q_entry", "q_bwd_island"}, by
+    assert not [e for e in led.events if e.kind == "dequantize"]
+    # the wire + optimizer-state quantizes exist but are FUSED kind
+    assert ("fused_quantize", "dp_wire") in by
+    assert ("fused_quantize", "opt_state") in by

@@ -359,3 +359,211 @@ def test_dist_rejects_model_parallel_mesh():
     with pytest.raises(ValueError, match="model-parallel"):
         make_train_step(cfg, get_recipe("fp8_flow"), plan, AdamWConfig(),
                         dist=DistPlan())
+
+
+# ---------------------------------------------------------------------------
+# Streaming wire (schedule='stream'): layer-aligned reverse-order buckets,
+# parity vs the post-hoc wire, the in-backward issue order, and the fast
+# clear errors when a configuration cannot stream.
+# ---------------------------------------------------------------------------
+def test_layered_layout_partitions_and_reverse_orders():
+    """Layered buckets cover every leaf per layer, never span a layer
+    boundary, and are emitted in the staged backward's order: main stack
+    last-layer-first, then the dense prologue last-first."""
+    cfg = get_arch("deepseek_v2_lite").reduced()
+    from repro.models.lm import init_params
+    params = init_params(cfg, jax.random.key(0))
+    plan = DistPlan(schedule="stream")
+    layout = build_layout(params, plan)
+    leaves = jax.tree.leaves(params)
+    slot_idx = {s.index for b in layout.buckets for s in b.slots}
+    sens_idx = {i for i, _ in layout.sensitive}
+    assert slot_idx | sens_idx == set(range(len(leaves)))
+    assert not (slot_idx & sens_idx)
+    # every bucket belongs to exactly one (stack, layer)
+    for b in layout.buckets:
+        assert b.stack is not None and b.layer is not None
+        assert all(s.layer == b.layer for s in b.slots)
+        assert b.rows % plan.shard_multiple == 0
+    # reverse emission order: 'layers' L-1..0 before 'dense_layers' nd-1..0
+    keys = [(b.stack, b.layer) for b in layout.buckets]
+    main = [l for s, l in keys if s == "layers"]
+    dense = [l for s, l in keys if s == "dense_layers"]
+    assert main == sorted(main, reverse=True) and main[0] == max(main)
+    assert dense == sorted(dense, reverse=True)
+    assert keys.index(("layers", main[-1])) < keys.index(
+        ("dense_layers", dense[0]))
+    # each stacked eligible leaf appears once per layer
+    from collections import Counter
+    per = Counter(s.index for b in layout.buckets for s in b.slots)
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    for i, n in per.items():
+        path = [s.path for b in layout.buckets for s in b.slots
+                if s.index == i][0]
+        want = n_main if path.startswith("layers.") else cfg.n_dense_layers
+        assert n == want, (path, n, want)
+
+
+def test_layered_bucket_flat_scatter_roundtrip():
+    """Per-layer slots slice the stacked leaf; scatter + restack is exact."""
+    cfg = get_arch("qwen15_05b").reduced()
+    from repro.models.lm import init_params
+    params = init_params(cfg, jax.random.key(0))
+    layout = build_layout(params, DistPlan(schedule="stream"))
+    leaves = jax.tree.leaves(params)
+    stacked = {}
+    for b in layout.buckets:
+        flat = bucket_flat(b, leaves)
+        assert flat.shape == (b.rows, TILE)
+        for key, piece in bucket_scatter(b, flat, leaves).items():
+            assert isinstance(key, tuple)
+            stacked.setdefault(key[0], {})[key[1]] = piece
+    for i, pieces in stacked.items():
+        re = jnp.stack([pieces[l] for l in range(leaves[i].shape[0])])
+        assert re.dtype == leaves[i].dtype
+        np.testing.assert_array_equal(np.asarray(re, np.float32),
+                                      np.asarray(leaves[i], np.float32))
+
+
+def test_streaming_matches_posthoc_wire():
+    """Reverse-order-bucket parity: schedule='stream' vs schedule='posthoc'
+    over the SAME layered layout — identical buckets and quantization
+    groups, only the issue order differs, so the loss curves and updated
+    params must agree to reduction-order noise."""
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh, _ = _dp_mesh()
+    l_s, st_s = _train(cfg, mesh, DistPlan(wire="fp8", schedule="stream"), 5)
+    l_p, st_p = _train(cfg, mesh, DistPlan(wire="fp8", layered=True), 5)
+    assert np.isfinite(l_s).all()
+    np.testing.assert_allclose(l_s, l_p, rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(st_s["params"]),
+                    jax.tree.leaves(st_p["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_streaming_moe_arch_trains():
+    """Streaming through a MoE arch with a dense prologue + shared experts
+    (per-layer buckets over we13/we2/ws13/ws2, dense stack streamed after
+    the main stack)."""
+    cfg = get_arch("deepseek_v2_lite").reduced()
+    mesh, _ = _dp_mesh()
+    losses, state = _train(cfg, mesh, DistPlan(wire="fp8",
+                                               schedule="stream"), 3)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] + 0.1
+    layout = build_layout(state["params"], DistPlan(schedule="stream"))
+    bucket_names = {s.path.split(".")[-1]
+                    for b in layout.buckets for s in b.slots}
+    assert {"we13", "we2", "ws13", "ws2"} <= bucket_names
+
+
+def test_streaming_fp8_vs_f32_training_parity():
+    """The acceptance gate: 20 steps, fp8-STREAMING loss curve within 1% of
+    the f32 post-hoc wire (same tolerance the PR-3 wire holds)."""
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh, _ = _dp_mesh()
+    l_fp8, _ = _train(cfg, mesh, DistPlan(wire="fp8", schedule="stream"), 20)
+    l_f32, _ = _train(cfg, mesh, DistPlan(
+        wire="f32", policy=StatePolicy(m="f32", v="f32", master="f32")), 20)
+    assert np.isfinite(l_fp8).all() and np.isfinite(l_f32).all()
+    assert l_fp8[-5:].mean() < l_fp8[:3].mean() - 0.1
+    rel = abs(l_fp8[-5:].mean() - l_f32[-5:].mean()) / l_f32[-5:].mean()
+    assert rel < 0.01, f"fp8 streaming vs f32 wire diverged: {rel:.4f}"
+    assert np.max(np.abs(l_fp8 - l_f32) / np.abs(l_f32)) < 0.05
+
+
+def test_streaming_jaxpr_issues_rs_inside_backward():
+    """The structural check: in the streaming step's jaxpr, at least one
+    bucket reduce-scatter (all_to_all) is issued BEFORE the last backward
+    GEMM; the post-hoc step issues every one after."""
+    if jax.device_count() < 2:
+        pytest.skip("P=1 elides the collective "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh, n = _dp_mesh()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=1e-3)
+    recipe = get_recipe("fp8_flow")
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=max(n, 2))
+    batch = make_batch(data, 0)
+
+    def jaxpr_of(dist):
+        state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
+        step = make_train_step(cfg, recipe, plan, opt, dist=dist,
+                               total_steps=10, warmup_steps=2)
+        return str(jax.make_jaxpr(step)(state, batch))
+
+    jx_s = jaxpr_of(DistPlan(wire="fp8", schedule="stream"))
+    jx_p = jaxpr_of(DistPlan(wire="fp8", layered=True))
+    assert jx_s.count("all_to_all") == jx_p.count("all_to_all") > 0
+    assert jx_s.find("all_to_all") < jx_s.rfind("dot_general"), \
+        "streaming wire: no reduce-scatter before the last backward GEMM"
+    assert jx_p.find("all_to_all") > jx_p.rfind("dot_general"), \
+        "post-hoc wire unexpectedly interleaved (baseline drifted)"
+
+
+def test_streaming_fast_clear_errors():
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh, _ = _dp_mesh(1)
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    # schedule='stream' forces layer-aligned buckets
+    with pytest.raises(ValueError, match="layer-aligned"):
+        DistPlan(schedule="stream", layered=False)
+    # grad accumulation cannot stream (fast error at make_train_step)
+    with pytest.raises(ValueError, match="grad_accum"):
+        make_train_step(cfg, get_recipe("fp8_flow"), plan, AdamWConfig(),
+                        dist=DistPlan(schedule="stream"), grad_accum=2)
+    # encoder-decoder archs keep the post-hoc wire
+    enc = get_arch("seamless_m4t_v2").reduced()
+    with pytest.raises(ValueError, match="decoder-only"):
+        make_train_step(enc, get_recipe("fp8_flow"), plan, AdamWConfig(),
+                        dist=DistPlan(schedule="stream"))
+    # the launcher-facing probe reports a reason instead of raising
+    from repro.dist import streaming_fallback_reason
+    assert streaming_fallback_reason(enc) is not None
+    assert streaming_fallback_reason(cfg) is None
+
+
+def test_staged_forward_matches_scan():
+    """ParallelPlan.stage_layers runs the decoder through the unrolled
+    staged program (_run_stack_unrolled, two-layer carry window) — same
+    function as the monolithic scan."""
+    from repro.data.pipeline import make_batch as mk
+    from repro.models.lm import forward
+    cfg = get_arch("deepseek_v2_lite").reduced()
+    from repro.models.lm import init_params
+    params = init_params(cfg, jax.random.key(0))
+    plan_scan = ParallelPlan(mesh=None, dp_axes=(), shard_map_mlp=False)
+    plan_staged = ParallelPlan(mesh=None, dp_axes=(), shard_map_mlp=False,
+                               stage_layers=True)
+    batch = mk(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2), 0)
+    recipe = get_recipe("fp8_flow")
+    l0, m0 = jax.jit(lambda p, b: forward(cfg, recipe, plan_scan, p, b))(
+        params, batch)
+    l1, m1 = jax.jit(lambda p, b: forward(cfg, recipe, plan_staged, p, b))(
+        params, batch)
+    # same math, different fusion groups (scan body vs unrolled layers):
+    # bf16 forward rounding differs at ~1e-4 relative
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-3)
+    np.testing.assert_allclose(float(m1["aux_loss"]), float(m0["aux_loss"]),
+                               rtol=1e-3, atol=1e-6)
+
+
+def test_grad_accum_keeps_forward_metrics():
+    """_local_grads used to return {} for grad_accum > 1 — forward metrics
+    must now be accumulated and averaged like the loss."""
+    cfg = get_arch("deepseek_v2_lite").reduced()
+    plan = ParallelPlan(mesh=None, dp_axes=(), shard_map_mlp=False)
+    opt = AdamWConfig(lr=1e-3)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    flat = make_batch(data, 0)
+    micro = jax.tree.map(lambda a: a.reshape(2, 2, *a.shape[1:]), flat)
+    step = jax.jit(make_train_step(cfg, get_recipe("fp8_flow"), plan, opt,
+                                   grad_accum=2, total_steps=10,
+                                   warmup_steps=2))
+    _, metrics = step(state, micro)
+    assert "aux_loss" in metrics, metrics.keys()
+    assert np.isfinite(float(metrics["aux_loss"]))
+    assert np.isfinite(float(metrics["loss"]))

@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from repro.core import casts
 from repro.core.moe import (DispatchPlan, MoEConfig, moe_block,
-                            moe_block_decode, moe_block_overlapped)
+                            moe_block_decode, moe_block_decode_overlapped,
+                            moe_block_overlapped)
 from repro.core.recipes import get_recipe
 from tests.conftest import make_mesh11
 
@@ -185,6 +186,96 @@ def test_moe_decode_reports_real_drop_frac():
                    out_specs=P())
     # C_dec = round_up(2*64*1/4, 8) = 32 slots for expert 0; 64 assignments
     assert float(sm(x, wr, w13, w2)) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# moe_block_decode_overlapped: the prefetched (chunk-pipelined psum) decode
+# path must match the synchronous psum path bitwise in the no-drop regime.
+# ---------------------------------------------------------------------------
+def _sharded_decode(recipe, cfg, mesh, block, **kw):
+    """Decode-style sharding: tokens REPLICATED across the EP axis, experts
+    sharded — the combine is a psum, not an all-to-all."""
+    def body(x, wr, w13, w2):
+        y, m = block(recipe, cfg, x, wr, w13, w2, **kw)
+        # aux is rank-identical (full-batch router on replicated x); the
+        # pmean proves the invariance to the replication checker and is
+        # bitwise-neutral (sum of P equal po2-divisible terms)
+        return y, jax.lax.pmean(m["aux_loss"], "model"), m["drop_frac"]
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, None), P(None, None),
+                               P("model", None, None), P("model", None, None)),
+                     out_specs=(P(None, None), P(), P()))
+
+
+@pytest.mark.parametrize("name", ["fp8_flow", "bf16"])
+@pytest.mark.parametrize("n_chunks", [2, 4])
+def test_decode_overlap_parity(name, n_chunks):
+    """Chunking the decode batch is exact: decode tokens never interact
+    below the combine, the router runs over the WHOLE batch (aux identical
+    at any depth), and the fp8 entry quantize happens once (row scales are
+    row-local).  Bitwise parity vs the synchronous psum."""
+    recipe = get_recipe(name)
+    mesh = make_mesh11()
+    cfg, args = _toy_moe(T=64, cf=4.0)
+    y0, a0, d0 = _sharded_decode(recipe, cfg, mesh, moe_block_decode)(*args)
+    y1, a1, d1 = _sharded_decode(recipe, cfg, mesh,
+                                 moe_block_decode_overlapped,
+                                 n_chunks=n_chunks)(*args)
+    assert float(d0) == 0.0 and float(d1) == 0.0
+    # per-token math is identical; the per-chunk C_dec changes the grouped
+    # GEMM's padded shape, and XLA's shape-dependent tiling can wobble the
+    # bf16 output by 1 ulp — tolerance pinned to that, far below fp8 error
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32), atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a0))
+
+
+def test_decode_overlap_parity_multidevice():
+    """Real 2-rank EP: the combine psums actually cross ranks."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    recipe = get_recipe("fp8_flow")
+    mesh = make_mesh((1, 2), ("data", "model"))
+    cfg, args = _toy_moe(T=64, cf=4.0)
+    y0, a0, d0 = _sharded_decode(recipe, cfg, mesh, moe_block_decode)(*args)
+    y1, a1, d1 = _sharded_decode(recipe, cfg, mesh,
+                                 moe_block_decode_overlapped,
+                                 n_chunks=2)(*args)
+    assert float(d0) == 0.0 and float(d1) == 0.0
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32), atol=1e-2)
+
+
+def test_decode_overlap_pipelines_the_psum():
+    """Depth n converts the single combine psum into an n-deep chain (+1
+    for the drop-fraction scalar), with each chunk's dispatch/expert
+    compute traced BETWEEN consecutive combine psums — the double-buffer
+    window XLA's latency-hiding scheduler needs."""
+    recipe = get_recipe("fp8_flow")
+    mesh = make_mesh11()
+    cfg, args = _toy_moe(T=64, cf=4.0)
+
+    def jaxpr_of(block, **kw):
+        return str(jax.make_jaxpr(
+            lambda *a: _sharded_decode(recipe, cfg, mesh, block, **kw)(*a))(
+            *args))
+
+    jx_sync = jaxpr_of(moe_block_decode)
+    # combine + drop_frac (+1: the harness's aux pmean lowers to a psum)
+    assert jx_sync.count("psum") == 3
+    for n in (2, 4):
+        jx = jaxpr_of(moe_block_decode_overlapped, n_chunks=n)
+        assert jx.count("psum") == n + 2, (n, jx.count("psum"))
+        # grouped-FFN GEMMs appear between the first and last combine psum
+        first, last = jx.find("psum"), jx.rfind("psum")
+        assert jx.find("dot_general", first, last) != -1
+
+    # tiny decode batches degrade to the synchronous depth
+    assert DispatchPlan().decode_chunks_for(4) == 1
+    assert DispatchPlan().decode_chunks_for(64) == 2
+    assert DispatchPlan(decode_chunks=4).decode_chunks_for(64) == 4
 
 
 # ---------------------------------------------------------------------------
