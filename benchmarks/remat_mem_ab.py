@@ -1,0 +1,170 @@
+"""Activation-residency A/B (train/memory.py MemoryPlan).
+
+Measures, for each remat policy, the REAL residual set a decoder MoE
+layer's backward keeps live — ``jax.ad_checkpoint``'s saved-residual
+introspection, classified into fp8 payload / po2 scales / wide bf16 /
+small — and checks the paper-memory acceptance gate:
+
+  * ``fp8_resident`` keeps >= 3x fewer checkpointed-activation bytes per
+    MoE layer than ``full`` (bf16 stage) remat;
+  * residency invariant: under ``fp8_resident`` NO saved bf16/f32
+    activation is wider than the residual stream (everything wide is
+    e4m3 payload bits + po2 scales);
+  * the analytic bytes model (memory.layer_saved_bytes_model — the README
+    table) tracks the measurement.
+
+Also measures the compile-time side of the ROADMAP follow-on ("unrolled vs
+scan at real depth — checkpoint-of-pairs"): trace+lower wall time of the
+scan driver vs the unrolled staged driver vs unrolled+pair at depth, and
+counts remat sites in the jaxpr (pair must halve the unrolled count).
+
+  PYTHONPATH=src python benchmarks/remat_mem_ab.py --dry-run     # CI smoke
+  PYTHONPATH=src python benchmarks/remat_mem_ab.py --steps 20    # + parity
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+POLICIES = ("none", "full", "fp8_resident", "pair")
+
+
+def run(arch: str = "qwen3_moe_235b", batch: int = 4, seq: int = 128,
+        depth: int = 8, steps: int = 0, dry_run: bool = False):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    try:
+        from benchmarks.common import emit
+    except ModuleNotFoundError:      # invoked as `python benchmarks/...py`
+        sys.path.insert(0, os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        from benchmarks.common import emit
+    from repro.configs import get_arch
+    from repro.core.recipes import get_recipe
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.models.lm import NO_PLAN, forward, init_params
+    from repro.train.memory import (layer_saved_bytes_model,
+                                    measure_layer_residuals)
+
+    cfg = get_arch(arch).reduced()
+    recipe = get_recipe("fp8_flow")
+    plan = NO_PLAN
+    T = batch * seq
+
+    # ---- saved-residual bytes per MoE layer, per policy ------------------
+    # (measure_layer_residuals is the SAME harness tests/test_remat.py
+    # gates on — benchmark and test account the same jaxpr)
+    act_bytes, wide_bf16 = {}, {}
+    for pol in POLICIES:
+        cls = measure_layer_residuals(cfg, recipe, pol, batch=batch, seq=seq)
+        act_bytes[pol] = (cls["fp8"] + cls["scale"] + cls["wide_bf16"]
+                          + cls["small"])
+        wide_bf16[pol] = cls["wide_bf16"]
+        model = layer_saved_bytes_model(cfg, T, pol)
+        emit(f"remat_mem_{arch}_{pol}", float(act_bytes[pol]),
+             f"saved_act_B={act_bytes[pol]};fp8_B={cls['fp8']};"
+             f"scale_B={cls['scale']};wide_bf16_B={cls['wide_bf16']};"
+             f"small_B={cls['small']};model_B={model:.0f}")
+
+    ratio = act_bytes["full"] / max(act_bytes["fp8_resident"], 1)
+    emit(f"remat_mem_ratio_{arch}", ratio,
+         f"full_B={act_bytes['full']};fp8_resident_B="
+         f"{act_bytes['fp8_resident']};gate=3.0x")
+    assert ratio >= 3.0, \
+        f"fp8_resident saves only {ratio:.2f}x fewer activation bytes " \
+        f"than full bf16 remat (< 3x gate)"
+    # residency invariant: nothing wide crosses the boundary in bf16
+    assert wide_bf16["fp8_resident"] == 0, \
+        f"fp8_resident saved {wide_bf16['fp8_resident']} wide bf16 bytes"
+    # ordering sanity: pair <= fp8_resident <= full <= none
+    assert act_bytes["pair"] <= act_bytes["fp8_resident"] \
+        <= act_bytes["full"] <= act_bytes["none"], act_bytes
+
+    # ---- compile-time: scan vs unrolled vs unrolled+pair at depth --------
+    glen = len(cfg.pattern)
+    d = depth // glen * glen or glen
+    data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+    b = make_batch(data, 0)
+    trace_us, remat_sites = {}, {}
+    for name, staged, pol in (("scan", False, "full"),
+                              ("unrolled", True, "full"),
+                              ("pair", True, "pair")):
+        c = dataclasses.replace(cfg, n_layers=d, n_dense_layers=0,
+                                remat_policy=pol)
+        p_d = init_params(c, jax.random.key(0))
+        pl = dataclasses.replace(plan, stage_layers=staged)
+
+        def loss(p, bb, _c=c, _pl=pl):
+            return forward(_c, recipe, _pl, p, bb)[0]
+
+        t0 = time.perf_counter()
+        jx = str(jax.make_jaxpr(jax.value_and_grad(loss))(p_d, b))
+        jax.jit(loss).lower(p_d, b)
+        trace_us[name] = (time.perf_counter() - t0) * 1e6
+        remat_sites[name] = jx.count("remat2[")
+        emit(f"remat_compile_{name}_d{d}", trace_us[name],
+             f"trace_lower_us={trace_us[name]:.0f};"
+             f"remat_sites={remat_sites[name]}")
+    # pair halves the unrolled trace sites (the ROADMAP follow-on's point)
+    assert remat_sites["pair"] <= remat_sites["unrolled"] // 2 + 1, \
+        remat_sites
+
+    if dry_run:
+        print(f"remat_mem_ab: dry-run OK ({arch}: fp8_resident keeps "
+              f"{ratio:.2f}x fewer checkpointed-activation bytes/MoE layer "
+              f"than full bf16 remat; 0 wide bf16 saves; pair "
+              f"{remat_sites['pair']} vs unrolled {remat_sites['unrolled']} "
+              f"remat sites at depth {d})")
+        return
+
+    # ---- optional: short training parity across policies -----------------
+    if steps:
+        losses = {}
+        for pol in POLICIES:
+            c = dataclasses.replace(cfg, remat_policy=pol)
+            from repro.optim.adamw import AdamWConfig
+            from repro.train.train_step import (init_train_state,
+                                                make_train_step)
+            opt = AdamWConfig(lr=1e-3)
+            state = init_train_state(c, opt, jax.random.key(0))
+            step = jax.jit(make_train_step(c, recipe, plan, opt,
+                                           total_steps=steps,
+                                           warmup_steps=2))
+            ls = []
+            for i in range(steps):
+                state, m = step(state, make_batch(data, i))
+                ls.append(float(m["loss"]))
+            losses[pol] = np.array(ls)
+            emit(f"remat_parity_{pol}", float(losses[pol][-1]),
+                 f"loss_first={losses[pol][0]:.5f};"
+                 f"loss_last={losses[pol][-1]:.5f}")
+        ref = losses["none"]
+        for pol in POLICIES:
+            rel = np.max(np.abs(losses[pol] - ref) / np.abs(ref))
+            assert rel < 1e-5, (pol, rel)
+        print(f"remat_mem_ab: {steps}-step loss parity OK (<1e-5 rel)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_moe_235b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--depth", type=int, default=8,
+                    help="stack depth for the compile-time A/B")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="if > 0, also run the N-step loss-parity check")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="bytes model + compile-time only (CI smoke)")
+    args = ap.parse_args()
+    run(arch=args.arch, batch=args.batch, seq=args.seq, depth=args.depth,
+        steps=args.steps, dry_run=args.dry_run)
+
+
+if __name__ == "__main__":
+    main()

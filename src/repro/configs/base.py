@@ -59,9 +59,22 @@ class ArchConfig:
     fsdp: bool = False             # shard param dim0 over 'data' too
     attn_tp: bool = True           # TP attention (requires n_heads % tp == 0)
     grad_accum: int = 1            # microbatching (memory fit at train_4k)
-    remat: bool = True
+    # activation-residency policy (train/memory.py MemoryPlan):
+    #   'none' | 'full' | 'fp8_resident' | 'pair'
+    # (legacy sweep alias: a bool normalizes to 'full'/'none')
+    remat_policy: str = "full"
     # long_500k applicability (sub-quadratic rule, DESIGN.md §6)
     subquadratic: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.remat_policy, bool):   # legacy remat=True/False
+            object.__setattr__(self, "remat_policy",
+                               "full" if self.remat_policy else "none")
+
+    @property
+    def remat(self) -> bool:
+        """Legacy read alias: whether ANY rematerialization is active."""
+        return self.remat_policy != "none"
 
     @property
     def vocab_padded(self) -> int:

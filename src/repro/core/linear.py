@@ -37,7 +37,8 @@ import jax.numpy as jnp
 from repro.core import casts
 from repro.core.fp8 import TILE
 from repro.core.quant import (QTensor, _dequantize_nocount, dequantize,
-                              quantize_blockwise, quantize_rowwise)
+                              quantize_blockwise, quantize_rowwise,
+                              tag_qtensor, tag_saveable)
 from repro.core.recipes import Recipe
 from repro.core.transpose import transpose_direct, transpose_naive
 
@@ -220,7 +221,8 @@ def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
     name = recipe.name
     if name == "bf16":
         x = x_in
-        h = jnp.matmul(x.astype(jnp.bfloat16), w13.astype(jnp.bfloat16))
+        h = tag_saveable(jnp.matmul(x.astype(jnp.bfloat16),
+                                    w13.astype(jnp.bfloat16)), "stage_ffn_h")
         a = _act_fwd(act, h)
         y = jnp.matmul(a, w2.astype(jnp.bfloat16))
         return y, (x, h, w13, w2)
@@ -228,18 +230,17 @@ def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
     qw13, qw2 = _quant_weights(recipe, w13, w2)
 
     if name == "fp8_flow":
-        qx: QTensor = x_in
-        y, (qa, h_saved) = ffn_fwd_fp8_core(recipe, act, qx, qw13, qw2)
+        y, (qx, qa, h_saved) = ffn_fwd_fp8_core(recipe, act, x_in, qw13, qw2)
         wit = (jnp.zeros((0,), w13.dtype), jnp.zeros((0,), w2.dtype))
         return y, (qx, qa, h_saved, qw13, qw2, wit)
 
     if name == "naive_fp8":
         # x arrives in BF16 (the dispatch DQ'd it — Fig 2c's Q/DQ-around-comm)
         x = x_in
-        qx = _q_row(recipe, x, "q_gemm1_in")                 # explicit (3)
+        qx = tag_qtensor(_q_row(recipe, x, "q_gemm1_in"), "fp8_qx")  # (3)
         h = _ggemm(recipe, qx, qw13, jnp.bfloat16)
         a = _act_fwd(act, h)                                 # separate kernel
-        qa = _q_row(recipe, a, "q_gemm2_in")                 # explicit (4)
+        qa = tag_qtensor(_q_row(recipe, a, "q_gemm2_in"), "fp8_qa")  # (4)
         y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
         # x and a are SAVED IN FP8 (DeepSeek's memory trick) — their Wgrad
         # layouts in bwd must go through dequant->transpose->requant.
@@ -249,7 +250,8 @@ def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
     if name == "blockwise":
         x = x_in                                             # bf16
         qx = _q_row(recipe, x, "q_gemm1_in")                 # explicit cast
-        h = _ggemm(recipe, qx, qw13, jnp.bfloat16)
+        h = tag_saveable(_ggemm(recipe, qx, qw13, jnp.bfloat16),
+                         "stage_ffn_h")
         a = _act_fwd(act, h)
         qa = _q_row(recipe, a, "q_gemm2_in")                 # explicit cast
         y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
@@ -271,9 +273,14 @@ def _psum(v, axes):
 def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
                      qw2: QTensor):
     """fp8_flow grouped FFN forward on an already-quantized input.
-    Returns (y bf16, (qa, h_saved)) — the residuals the backward core needs
-    (plus qx / the weights, which the caller already holds)."""
+    Returns (y bf16, (qx, qa, h_saved)) — the residuals the backward core
+    needs (the weights the caller already holds).  qx/qa come back
+    checkpoint_name-tagged ('fp8_qx'/'fp8_qa'): callers must save THESE so
+    the MemoryPlan 'fp8_resident' policy (train/memory.py) keeps the
+    QTensor stage outputs resident across the forward/backward boundary."""
+    qx = tag_qtensor(qx, "fp8_qx")
     h = _ggemm(recipe, qx, qw13, jnp.bfloat16)              # BF16 island in
+    h = tag_saveable(h, "stage_ffn_h")
     if act == "swiglu":
         qa = _fused_swiglu_quant(recipe, h)
     else:
@@ -281,8 +288,9 @@ def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
         casts.record("fused_quantize", "act_quant", h.size)
         qa = quantize_rowwise(_act_fwd(act, h), scale_mode=recipe.scale_mode,
                               tag="act_quant", kind="fused_quantize_inner")
+    qa = tag_qtensor(qa, "fp8_qa")
     y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
-    return y, (qa, h if recipe.save_h else None)
+    return y, (qx, qa, h if recipe.save_h else None)
 
 
 def ffn_bwd_fp8_core(recipe: Recipe, act: str, gx_axes: tuple, qx: QTensor,

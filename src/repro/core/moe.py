@@ -34,7 +34,8 @@ from repro.core.fp8 import TILE
 from repro.core.linear import (_q_row, _quant_weights, dequantize_exit,
                                expert_ffn, ffn_bwd_fp8_core, ffn_fwd_fp8_core,
                                quantize_entry)
-from repro.core.quant import (QTensor, _dequantize_nocount, quantize_rowwise)
+from repro.core.quant import (QTensor, _dequantize_nocount, quantize_rowwise,
+                              tag_saveable)
 from repro.core.recipes import Recipe
 
 
@@ -298,7 +299,9 @@ def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
         ffn_in = x_exp.reshape(E_loc, C_exp, D)
 
     # ---- grouped expert FFN (the recipe heart) -----------------------------
-    y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2)
+    y_exp = tag_saveable(
+        expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2),
+        "stage_expert_out")
 
     # expert-side prob weighting (grad wrt p flows through this product)
     p_exp = _take_rows(recv_p[:, None], row_map_exp).reshape(E_loc, C_exp)
@@ -357,8 +360,9 @@ def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
         ffn_in = _take_rows(x.astype(jnp.bfloat16), tok_of_slot)
         ffn_in = ffn_in.reshape(E, C_exp, D)
 
-    y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (tp_axis,),
-                       ffn_in, w13, w2)                      # F-sliced partial
+    y_exp = tag_saveable(expert_ffn(recipe, cfg.act, cfg.dp_axes, (tp_axis,),
+                                    ffn_in, w13, w2),        # F-sliced partial
+                         "stage_expert_out")
     if combine_mode == "psum_first":
         y_exp = jax.lax.psum(y_exp, tp_axis)                 # TP reduction
 
@@ -667,7 +671,9 @@ def _overlap_chunks_autodiff(recipe, cfg, n, x, p, ids, w13, w2):
         recv_p = _a2a(pf, cfg.ep_axis)
         rme, ret = _expert_plan(recv_expert, E_loc, C_exp)
         x_exp = _take_rows(recv_in, rme).reshape(E_loc, C_exp, D)
-        y_exp = expert_ffn(recipe, cfg.act, cfg.dp_axes, (), x_exp, w13, w2)
+        y_exp = tag_saveable(
+            expert_ffn(recipe, cfg.act, cfg.dp_axes, (), x_exp, w13, w2),
+            "stage_expert_out")
         p_exp = _take_rows(recv_p[:, None], rme).reshape(E_loc, C_exp)
         y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
         y_ret = _take_rows(y_exp.reshape(E_loc * C_exp, D), ret)
@@ -717,7 +723,9 @@ def _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2):
         d_e, s_e = _permute_pad_fields(d_r, s_r, rme, recipe.use_pallas)
         qx_c = QTensor(d_e.reshape(E_loc, C_exp, D),
                        s_e.reshape(E_loc, C_exp, D // TILE), (1, 1, TILE))
-        y_exp, (qa_c, h_c) = ffn_fwd_fp8_core(recipe, cfg.act, qx_c, qw13, qw2)
+        y_exp, (qx_c, qa_c, h_c) = ffn_fwd_fp8_core(recipe, cfg.act, qx_c,
+                                                    qw13, qw2)
+        y_exp = tag_saveable(y_exp, "stage_expert_out")
         p_exp = _take_rows(p_r[:, None], rme).reshape(E_loc, C_exp)
         y_w = y_exp * p_exp[..., None].astype(y_exp.dtype)
         y_ret = _take_rows(y_w.reshape(E_loc * C_exp, D), ret)

@@ -51,6 +51,54 @@ class QTensor:
         return self.data.size * 1 + self.scale.size * 4
 
 
+# ---------------------------------------------------------------------------
+# checkpoint_name tags for the activation-residency plan (train/memory.py).
+# The MemoryPlan policies select saveables BY NAME (jax.checkpoint_policies.
+# save_only_these_names): 'full' keeps the BF16 stage boundaries, while
+# 'fp8_resident' keeps only the QTensor stage outputs — so the backward
+# recomputes from e4m3+scale instead of wide bf16 activations.
+# ---------------------------------------------------------------------------
+FP8_SAVE_NAMES = ("fp8_qx_data", "fp8_qx_scale",      # dispatched FFN input
+                  "fp8_qa_data", "fp8_qa_scale")      # post-activation GEMM2 in
+BF16_STAGE_NAMES = ("stage_attn_out",                 # attn residual-out
+                    "stage_ffn_in",                   # post-ln2 FFN input
+                    "stage_ffn_h",                    # the bf16 island h
+                    "stage_expert_out")               # expert out (combine in)
+
+
+def tag_saveable(x, name: str):
+    """Name a tensor for the residency policies (value-identity; None passes).
+
+    bf16 tensors are pinned with an explicit reduce_precision(8, 7) first:
+    XLA keeps excess precision through bf16 fusions, so without the pin a
+    policy that SAVES the tensor (materializing real bf16) would compute
+    slightly different bits than one that recomputes it — the pin makes
+    every residency policy evaluate the identical function (jax inserts the
+    same op on saved-residual producers; see jax#22244)."""
+    if x is None:
+        return None
+    from jax.ad_checkpoint import checkpoint_name
+    if x.dtype == jnp.bfloat16:
+        x = jax.lax.reduce_precision(x, 8, 7)
+    return checkpoint_name(x, name)
+
+
+def tag_qtensor(q: "QTensor", name: str) -> "QTensor":
+    """Tag a QTensor's payload + scales as '<name>_data' / '<name>_scale'.
+
+    The fp8 payload is tagged AS ITS uint8 BIT PATTERN (the same bitcast
+    idiom as the fused wire messages): jax's remat inserts
+    reduce_precision(finfo(dtype)) on saved-residual producers, which is
+    ill-defined for the no-inf e4m3fn format (overflow lanes turn NaN under
+    XLA fusion) — integer residuals skip that machinery and the bits are
+    the value anyway.  Only the fwd rules of the FFN/dispatch custom_vjps
+    call this, so autodiff never differentiates through the bitcast."""
+    u8 = jax.lax.bitcast_convert_type(q.data, jnp.uint8)
+    u8 = tag_saveable(u8, f"{name}_data")
+    data = jax.lax.bitcast_convert_type(u8, q.data.dtype)
+    return QTensor(data, tag_saveable(q.scale, f"{name}_scale"), q.tile)
+
+
 def _scale_shape(shape, tile):
     assert len(shape) == len(tile), (shape, tile)
     for s, t in zip(shape, tile):

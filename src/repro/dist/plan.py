@@ -135,10 +135,27 @@ class Bucket:
 
 
 @dataclasses.dataclass(frozen=True)
+class SensitiveSlot:
+    """One bf16-fallback leaf.  In the LAYERED layout, a sensitive leaf that
+    lives in a stacked decoder stack carries its `stack` tag: the streaming
+    backward (train_step._streamed_grads) then issues each LAYER's slice on
+    the bf16 psum wire together with that layer's FP8 bucket(s) instead of
+    batching the whole stacked leaf post-hoc.  Iterates as (index, path)
+    so legacy `for i, p in layout.sensitive` call sites keep working."""
+    index: int
+    path: str
+    stack: Optional[str] = None
+
+    def __iter__(self):
+        yield self.index
+        yield self.path
+
+
+@dataclasses.dataclass(frozen=True)
 class GradLayout:
     """Static bucketization of a params tree under a DistPlan."""
     buckets: Tuple[Bucket, ...]
-    sensitive: Tuple[Tuple[int, str], ...]   # (flatten index, path)
+    sensitive: Tuple[SensitiveSlot, ...]
     n_leaves: int
 
     @property
@@ -200,7 +217,7 @@ def build_layout(params, plan: DistPlan) -> GradLayout:
     for i, (path, leaf) in enumerate(flat):
         p = path_str(path)
         if is_sensitive(p, leaf, plan):
-            sensitive.append((i, p))
+            sensitive.append(SensitiveSlot(i, p))
             continue
         rows = -(-leaf.size // TILE)
         if cur_rows and cur_rows + rows > target_rows:
@@ -255,7 +272,9 @@ def _build_layout_layered(params, plan: DistPlan) -> GradLayout:
         for i, p, leaf in group:
             view = _LayerSlice(leaf)
             if is_sensitive(p, view, plan):
-                sensitive.append((i, p))     # reduced as the FULL stacked leaf
+                # stack tag: the streaming backward reduces this leaf one
+                # LAYER slice at a time, with that layer's bucket(s)
+                sensitive.append(SensitiveSlot(i, p, stack=name))
             else:
                 eligible.append((i, p, view.size))
         if eligible:
@@ -265,7 +284,7 @@ def _build_layout_layered(params, plan: DistPlan) -> GradLayout:
     tail = []
     for i, p, leaf in other:
         if is_sensitive(p, leaf, plan):
-            sensitive.append((i, p))
+            sensitive.append(SensitiveSlot(i, p))
         else:
             tail.append((i, p, leaf.size))
     pack(tail)
@@ -278,14 +297,19 @@ def streaming_fallback_reason(cfg, layout: Optional[GradLayout] = None,
     """Why the streaming wire schedule cannot run this configuration (None
     when it can).  Callers either raise (make_train_step — fast clear error)
     or fall back to the post-hoc schedule with a warning (launch/train.py)
-    instead of miscompiling."""
+    instead of miscompiling.
+
+    ``grad_accum`` is part of the probe's contract (callers pass the step's
+    setting) but no longer names a blocker: microbatch gradients accumulate
+    locally and each bucket is wired once, from the last microbatch's
+    backward (train_step._streamed_grads)."""
     if getattr(cfg, "encdec", False) or getattr(cfg, "frontend", "none") != "none":
         return ("the staged layer program drives plain decoder-only stacks; "
                 "encoder-decoder / frontend architectures keep the post-hoc "
                 "wire")
-    if grad_accum > 1:
-        return ("grad_accum > 1 would put every bucket on the wire once per "
-                "microbatch; stream only supports grad_accum == 1")
+    # grad_accum > 1 streams too: microbatch grads accumulate LOCALLY and
+    # each bucket's quantize + reduce-scatter is issued once, from inside
+    # the LAST microbatch's backward (train_step._streamed_grads).
     if layout is not None:
         if not layout.buckets:
             return "no FP8-eligible leaves to bucket (nothing to stream)"

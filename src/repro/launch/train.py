@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek_v2_lite \
       --recipe fp8_flow --steps 100 [--reduced] [--ckpt-dir DIR] \
-      [--elastic] [--dist-wire fp8] [--dist-schedule stream]
+      [--elastic] [--dist-wire fp8] [--dist-schedule stream] \
+      [--remat-policy fp8_resident] [--grad-accum N]
 
 On a real TPU fleet this process runs once per host under
 `jax.distributed.initialize()`; on this container use --reduced for an
@@ -18,10 +19,17 @@ with --reduced the test mesh spans every visible device on the data axis.
 reduces every bucket after the full backward; 'stream' aligns buckets to
 layer boundaries and issues each bucket's quantize + reduce-scatter from
 inside the staged backward the moment its layer's grads exist, hiding the
-DP wire behind the remaining backward compute.  When the configuration
-cannot stream (encoder-decoder arch, grad accumulation, buckets that do
-not align to layer boundaries) the launcher warns and falls back to
-'posthoc' instead of miscompiling.
+DP wire behind the remaining backward compute.  --grad-accum N streams
+too: microbatch grads accumulate locally and each bucket goes on the wire
+once, from the last microbatch's backward.  When the configuration cannot
+stream (encoder-decoder arch, buckets that do not align to layer
+boundaries) the launcher warns and falls back to 'posthoc' instead of
+miscompiling.
+
+--remat-policy selects the activation-residency plan
+(train/memory.py MemoryPlan): 'fp8_resident' keeps only the QTensor stage
+outputs across the forward/backward boundary (the paper's memory claim),
+'pair' checkpoints two-layer blocks (compile-time lever at depth).
 """
 import argparse
 import dataclasses
@@ -62,6 +70,17 @@ def main():
                     help="reduce buckets after the backward (posthoc) or "
                          "stream them out of the staged backward in reverse "
                          "layer order (stream)")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["none", "full", "fp8_resident", "pair"],
+                    help="activation-residency plan (train/memory.py "
+                         "MemoryPlan): none = save everything, full = bf16 "
+                         "stage checkpointing, fp8_resident = keep only the "
+                         "QTensor stage outputs across fwd/bwd, pair = "
+                         "checkpoint-of-pairs (compile-time lever)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches per step; with --dist-schedule "
+                         "stream the wire runs once, from inside the last "
+                         "microbatch's backward")
     args = ap.parse_args()
 
     dist = DistPlan(wire=args.dist_wire, schedule=args.dist_schedule) \
@@ -69,6 +88,9 @@ def main():
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.remat_policy is not None:
+        cfg = dataclasses.replace(cfg, remat_policy=args.remat_policy)
+    if args.reduced:
         # DP size must divide DistPlan.shard_multiple for equal ZeRO shards
         ndev = max(d for d in range(1, jax.device_count() + 1)
                    if dist.shard_multiple % d == 0
@@ -101,16 +123,19 @@ def main():
     if dist is not None and dist.schedule == "stream":
         # fast clear fallback: if the layout's buckets cannot align to layer
         # boundaries (or the config cannot stream), warn and run post-hoc —
-        # the layered layout is kept, so the ZeRO-1 state stays valid
+        # the layered layout is kept, so the ZeRO-1 state stays valid.
+        # (grad_accum no longer blocks streaming: microbatch grads
+        # accumulate locally and wire once on the last microbatch.)
         from repro.dist import build_layout, streaming_fallback_reason
-        # grad_accum=1 matches the step built below (make_train_step default)
         reason = streaming_fallback_reason(
-            cfg, build_layout(state["params"], dist), grad_accum=1)
+            cfg, build_layout(state["params"], dist),
+            grad_accum=args.grad_accum)
         if reason:
             print(f"[train] WARNING: streaming wire unavailable ({reason}); "
                   f"falling back to the post-hoc schedule")
             dist = dataclasses.replace(dist, schedule="posthoc")
     step = jax.jit(make_train_step(cfg, recipe, plan, opt, dist=dist,
+                                   grad_accum=args.grad_accum,
                                    total_steps=args.steps,
                                    warmup_steps=max(args.steps // 10, 1)))
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
@@ -124,6 +149,7 @@ def main():
                       "opt": dist_state_specs(mesh, state["opt"], dist.axis)}
     with mesh:
         state, hist = run_loop(step, state, data, n_steps=args.steps,
+                               grad_accum=args.grad_accum,
                                ckpt_dir=args.ckpt_dir, elastic=elastic,
                                restore_shardings=restore_sh)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> "

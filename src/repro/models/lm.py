@@ -3,8 +3,10 @@ dense GQA (starcoder2/qwen/llava), local:global patterns (gemma2/3), SSM
 (mamba2), hybrid (hymba), MoE (qwen3-moe/grok/deepseek), encoder-decoder
 (seamless), with VLM/audio stub frontends.
 
-Layer parameters are stacked (L, ...) and scanned in pattern groups; remat
-wraps each group.  The MLP/MoE stage runs inside shard_map so the paper's
+Layer parameters are stacked (L, ...) and scanned in pattern groups;
+rematerialization is owned by the MemoryPlan (train/memory.py), which wraps
+each group/layer per cfg.remat_policy.  The MLP/MoE stage runs inside
+shard_map so the paper's
 FP8 dispatch/dataflow recipes apply uniformly (core/moe.py, core/linear.py);
 attention/norm/embedding run under pjit auto-sharding in BF16.
 """
@@ -26,6 +28,7 @@ from repro.core.moe import (DispatchPlan, MoEConfig, moe_block,
 from repro.core.recipes import Recipe
 from repro.models.layers import apply_norm, attn_block, stage_ln_attn
 from repro.models.ssm import mamba2_block
+from repro.train.memory import MemoryPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -511,7 +514,8 @@ def _sub_layer(cfg, recipe, plan, kind, moe_layer, p, x, positions,
         x = _residual_constraint(plan, x, decode=decode)
         return x, aux, new_cache, new_ssm, new_conv
 
-    h2 = apply_norm(cfg.norm, x, p, "ln2")
+    from repro.core.quant import tag_saveable
+    h2 = tag_saveable(apply_norm(cfg.norm, x, p, "ln2"), "stage_ffn_in")
     if moe_layer:
         if decode:
             mlp_out, aux = _moe_stage(cfg, recipe, plan, p, h2, decode=True)
@@ -529,10 +533,19 @@ def _run_stack(cfg, recipe, plan, stack_params, pattern, n_layers, moe, x,
                positions, causal=True):
     """Scan over a homogeneous stack of layers, pattern-grouped: the stack is
     reshaped (n_groups, len(pattern), ...) and the pattern is unrolled inside
-    the (remat'd) scan body — e.g. gemma3's 5 local + 1 global per group."""
+    the scan body.  Rematerialization is owned by the MemoryPlan
+    (train/memory.py): the body is wrapped per cfg.remat_policy, and the
+    'pair' policy folds TWO pattern groups into each checkpointed body
+    (halving trace sites) when the depth allows."""
     pattern = _pattern_or_fallback(pattern, n_layers)
+    mem = MemoryPlan.from_config(cfg)
     glen = len(pattern)
     ng = n_layers // glen
+    fold = mem.group_factor(ng)
+    if fold > 1:
+        pattern = pattern * fold
+        glen *= fold
+        ng //= fold
 
     def group_body(carry, pslice):
         xc, aux = carry
@@ -543,9 +556,7 @@ def _run_stack(cfg, recipe, plan, stack_params, pattern, n_layers, moe, x,
             aux = aux + a
         return (xc, aux), None
 
-    body = group_body
-    if cfg.remat:
-        body = jax.checkpoint(group_body, prevent_cse=False)
+    body = mem.wrap(group_body)
     grouped = jax.tree.map(
         lambda a: a.reshape(ng, glen, *a.shape[1:]), stack_params)
     (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), grouped)
@@ -610,23 +621,29 @@ def _run_stack_unrolled(cfg, recipe, plan, stack_params, pattern, n_layers,
     order (what the streaming DP wire consumes).  The residual stream
     itself is strictly sequential; the real cross-layer overlap lives in
     the stage pipelines it enables (the chunked dispatch a2a and the
-    decode combine-psum chain in core/moe.py)."""
+    decode combine-psum chain in core/moe.py).  Rematerialization is owned
+    by the MemoryPlan: each checkpoint block holds one layer (or two under
+    the 'pair' policy — the compile-time lever)."""
     pattern = _pattern_or_fallback(pattern, n_layers)
+    mem = MemoryPlan.from_config(cfg)
     aux = jnp.float32(0.0)
     pending = None                  # the two-layer window's deferred scalar
-    for l in range(n_layers):
-        p_l = jax.tree.map(lambda a, _l=l: a[_l], stack_params)
-        kind = pattern[l % len(pattern)]
+    for blk in mem.layer_blocks(n_layers):
+        ps = tuple(jax.tree.map(lambda a, _l=l: a[_l], stack_params)
+                   for l in blk)
+        kinds = tuple(pattern[l % len(pattern)] for l in blk)
 
-        def f(p, xc, _kind=kind):
-            return layer_forward(cfg, recipe, plan, _kind, moe, p, xc,
-                                 positions, causal=causal)
+        def f(ps_, xc, _kinds=kinds):
+            a_blk = jnp.float32(0.0)
+            for p, kind in zip(ps_, _kinds):
+                xc, a = layer_forward(cfg, recipe, plan, kind, moe, p, xc,
+                                      positions, causal=causal)
+                a_blk = a_blk + a
+            return xc, a_blk
 
-        if cfg.remat:
-            f = jax.checkpoint(f, prevent_cse=False)
-        x, a = f(p_l, x)
-        if pending is not None:     # layer l-1's epilogue lands only now,
-            aux = aux + pending     # after layer l's stages were issued
+        x, a = mem.wrap(f)(ps, x)
+        if pending is not None:     # the previous block's epilogue lands
+            aux = aux + pending     # only after this block was issued
         pending = a
     if pending is not None:
         aux = aux + pending
@@ -775,8 +792,7 @@ def _run_encdec_decoder(cfg, recipe, plan, params, x, positions, enc):
         aux = aux + a
         return (xc, aux), None
 
-    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat \
-        else group_body
+    body = MemoryPlan.from_config(cfg).wrap(group_body)
     (x, aux), _ = jax.lax.scan(
         body, (x, jnp.float32(0.0)),
         (params["layers"], params["cross_layers"]))

@@ -94,7 +94,8 @@ def probe_train(cfg, recipe, plan, mesh, params_shapes, B, S):
                 aux = aux + a
             return x, aux
 
-        ckpt = jax.checkpoint(run, prevent_cse=False) if cfg.remat else run
+        from repro.train.memory import MemoryPlan
+        ckpt = MemoryPlan.from_config(cfg).wrap(run)
 
         def grad_fn(x, pslice):
             (y, aux), vjp = jax.vjp(ckpt, x, pslice)

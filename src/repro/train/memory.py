@@ -1,0 +1,229 @@
+"""Quantization-aware rematerialization: the activation-residency plan.
+
+``MemoryPlan`` is the SINGLE owner of ``jax.checkpoint`` for the whole stack
+(models/lm.py's scan + unrolled drivers, the encoder-decoder scan, the
+streaming per-layer backward in train/train_step.py, and the roofline
+probe).  It replaces the bare ``cfg.remat: bool`` with a POLICY over what
+stays resident across the forward/backward boundary, per decoder layer:
+
+  none          no rematerialization: autodiff saves every backward
+                residual.  In fp8_flow the grouped-FFN residuals are already
+                QTensors (the recipe's own FP8 activation checkpointing),
+                but the attention / norm / stage glue pins wide BF16 tensors
+                per layer — the maximum-memory, minimum-recompute corner.
+  full          BF16-boundary activation checkpointing — the classic
+                selective-recompute baseline every bf16 training stack
+                ships: the BF16 stage outputs (attn residual-out, the FFN
+                input, the FFN's bf16 island ``h``, the expert output) are
+                saved; within-stage values recompute.  The per-stage FP8
+                QTensors the fp8_flow recipe already produced are DISCARDED
+                and re-quantized inside the backward — the double work the
+                paper's memory claim is about.
+  fp8_resident  the paper policy: the ``checkpoint_name``-tagged QTensor
+                stage outputs (``qx``/``qa`` from
+                core/linear.py::ffn_fwd_fp8_core) are the ONLY saved
+                activations; the backward recomputes the cheap BF16 glue
+                (norms, attention, router, dispatch maps) from the
+                layer-boundary residual and feeds every FFN backward GEMM
+                from the FP8-resident saves.  Residency invariant: nothing
+                wider than e4m3 + its po2 scales crosses the layer boundary
+                except the residual stream itself
+                (tests/test_remat.py asserts it on the saved-residual set).
+  pair          checkpoint-of-pairs (the ROADMAP compile-time follow-on):
+                plain input-only checkpoints over TWO-layer blocks — halves
+                the trace sites at 61-layer DeepSeek depth, saves one bf16
+                residual per two layers, recomputes everything (the
+                smallest saved set / largest recompute corner).
+
+Saved-bytes-per-MoE-layer model (benchmarks/remat_mem_ab.py measures the
+real numbers off ``saved_residuals``; ``layer_saved_bytes_model`` below is
+the analytic version; A = T*top_k*capacity_factor expert-slot rows):
+
+  policy        saved activations / layer             bytes (bf16=2B, fp8=1B)
+  none          everything autodiff needs             >= full + attn out/lse
+  full          attn_out, ffn_in (T,D) bf16;          2(2TD + 2AF*g + AD)
+                island h (A, g*F) bf16;
+                expert out (A, D) bf16
+  fp8_resident  qx (A, D) e4m3 + scales;              (1+4/TILE)(AD + AF)
+                qa (A, F) e4m3 + scales
+  pair          one bf16 residual per 2 layers        T*D (amortized)
+
+The policies compute the SAME function — rematerialization is semantically
+invisible — so loss curves agree to rounding (tests/test_remat.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+
+from repro.core.quant import BF16_STAGE_NAMES, FP8_SAVE_NAMES
+
+POLICIES = ("none", "full", "fp8_resident", "pair")
+
+
+def _normalize(policy) -> str:
+    """Accept the legacy bool spelling (config-sweep aliases): True -> the
+    default 'full' remat, False -> 'none'."""
+    if isinstance(policy, bool):
+        return "full" if policy else "none"
+    if policy not in POLICIES:
+        raise ValueError(f"unknown remat policy {policy!r}; "
+                         f"pick from {POLICIES}")
+    return policy
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """Static activation-residency plan (hashable; safe to close over)."""
+    policy: str = "full"
+
+    def __post_init__(self):
+        object.__setattr__(self, "policy", _normalize(self.policy))
+
+    @classmethod
+    def from_config(cls, cfg) -> "MemoryPlan":
+        return cls(policy=getattr(cfg, "remat_policy", "full"))
+
+    # -- structural knobs ---------------------------------------------------
+    @property
+    def remat(self) -> bool:
+        """Whether any jax.checkpoint wrapper is applied at all."""
+        return self.policy != "none"
+
+    @property
+    def block_size(self) -> int:
+        """Layers per checkpoint block in the UNROLLED drivers (the staged
+        layer program + the streaming backward): 2 under 'pair'."""
+        return 2 if self.policy == "pair" else 1
+
+    def group_factor(self, n_groups: int) -> int:
+        """Pattern-group fold factor for the SCAN driver: under 'pair' two
+        pattern groups fuse into one (checkpointed) scan body when the depth
+        allows, halving the trace sites."""
+        return 2 if self.policy == "pair" and n_groups % 2 == 0 else 1
+
+    def layer_blocks(self, n_layers: int) -> Tuple[Tuple[int, ...], ...]:
+        """Partition [0, n_layers) into checkpoint blocks in forward order
+        (size block_size; a trailing odd layer gets its own block)."""
+        bs = self.block_size
+        return tuple(tuple(range(i, min(i + bs, n_layers)))
+                     for i in range(0, n_layers, bs))
+
+    def blocks_of(self, items: Sequence) -> Tuple[tuple, ...]:
+        """layer_blocks applied to an explicit per-layer sequence."""
+        return tuple(tuple(items[i] for i in blk)
+                     for blk in self.layer_blocks(len(items)))
+
+    # -- THE jax.checkpoint site --------------------------------------------
+    def wrap(self, f):
+        """Wrap a layer (or layer-block / scan-group) body according to the
+        policy.  This is the only place in the repository where
+        ``jax.checkpoint`` is invoked (tests/test_remat.py greps for it)."""
+        if self.policy == "none":
+            return f
+        if self.policy == "full":
+            return jax.checkpoint(
+                f, prevent_cse=False,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    *BF16_STAGE_NAMES))
+        if self.policy == "fp8_resident":
+            return jax.checkpoint(
+                f, prevent_cse=False,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    *FP8_SAVE_NAMES))
+        # 'pair': plain input-only checkpoint; the two-layer blocking is the
+        # driver's job (block_size / group_factor above)
+        return jax.checkpoint(f, prevent_cse=False)
+
+
+def saved_residuals(f, *args, **kwargs):
+    """Version-robust re-export of jax's saved-residual introspection: the
+    list of (aval, source) pairs the backward of ``f`` would keep live —
+    what the remat_mem benchmark and the residency tests account."""
+    try:
+        from jax.ad_checkpoint import saved_residuals as _sr
+    except ImportError:                           # jax 0.4.x: private home
+        from jax._src.ad_checkpoint import saved_residuals as _sr
+    return _sr(f, *args, **kwargs)
+
+
+def classify_residuals(res, residual_elems: int):
+    """Split a saved_residuals list into the accounting buckets the bytes
+    model reports: {'argument', 'fp8', 'scale', 'wide_bf16', 'small'} ->
+    total bytes.  ``residual_elems`` is the element count of the residual
+    stream (B*S*D) — the width bar of the fp8_resident invariant.  FP8
+    payloads are saved as their uint8 BIT PATTERN (core.quant.tag_qtensor),
+    so 1-byte dtypes count as 'fp8'."""
+    import jax.numpy as jnp
+    out = {"argument": 0, "fp8": 0, "scale": 0, "wide_bf16": 0, "small": 0}
+    for aval, src in res:
+        nbytes = aval.size * aval.dtype.itemsize
+        if "from the argument" in str(src):
+            out["argument"] += nbytes
+        elif aval.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2,
+                            jnp.uint8, jnp.int8):
+            out["fp8"] += nbytes
+        elif aval.size <= max(residual_elems // 16, 1):
+            # per-tile scales / routing metadata / scalars
+            out["scale" if aval.dtype == jnp.float32 else "small"] += nbytes
+        elif aval.size > residual_elems and jnp.issubdtype(
+                aval.dtype, jnp.floating) and aval.dtype.itemsize >= 2:
+            out["wide_bf16"] += nbytes
+        else:
+            out["small"] += nbytes
+    return out
+
+
+def measure_layer_residuals(cfg, recipe, policy, *, batch: int = 4,
+                            seq: int = 128):
+    """Measure + classify the saved-residual set of one decoder layer (the
+    first MoE layer, or the first layer of a dense arch) under ``policy``.
+    THE shared harness behind tests/test_remat.py and
+    benchmarks/remat_mem_ab.py — the residency gate and the bytes-model
+    benchmark must account the same jaxpr.  Runs plan-less (mesh=None)."""
+    import jax.numpy as jnp
+    # deferred: models/lm.py imports this module at load time
+    from repro.models.lm import (NO_PLAN, init_params, iter_layer_slices,
+                                 layer_forward)
+    params = init_params(cfg, jax.random.key(0))
+    entries = [e for e in iter_layer_slices(cfg, params) if e[3]] or \
+        list(iter_layer_slices(cfg, params))
+    _, _, kind, moe, p_l = entries[0]
+    D = cfg.d_model
+    x = jnp.ones((batch, seq, D), jnp.bfloat16) * 0.1
+    positions = jnp.arange(seq, dtype=jnp.int32)
+
+    def f(p, xc, _k=kind):
+        out, aux = layer_forward(cfg, recipe, NO_PLAN, _k, moe, p, xc,
+                                 positions)
+        return jnp.sum(out.astype(jnp.float32) ** 2) + aux
+
+    res = saved_residuals(MemoryPlan(policy).wrap(f), p_l, x)
+    return classify_residuals(res, batch * seq * D)
+
+
+def layer_saved_bytes_model(cfg, T: int, policy: str) -> float:
+    """Analytic saved-activation bytes per MoE layer under each policy (the
+    README table; benchmarks/remat_mem_ab.py checks it against the measured
+    saved_residuals).  T = tokens per device; excludes the layer-boundary
+    residual stream itself (identical across policies)."""
+    from repro.core.fp8 import TILE
+    policy = _normalize(policy)
+    D, F = cfg.d_model, (cfg.d_ff_expert if cfg.moe else cfg.d_ff)
+    g = cfg.gate_factor
+    A = int(T * cfg.top_k * cfg.capacity_factor) if cfg.moe else T
+    if policy == "pair":
+        return T * D * 2 / 2          # one bf16 residual per two layers
+    if policy == "fp8_resident":
+        per_fp8 = 1 + 4.0 / TILE      # e4m3 payload + f32 scale per TILE
+        return (A * D + A * F) * per_fp8
+    if policy == "full":
+        return 2.0 * (T * D           # attn residual-out
+                      + T * D         # ffn input (post-ln2)
+                      + A * g * F     # the bf16 island h
+                      + A * D)        # expert output (combine input)
+    # 'none': full's saves plus the attention residuals autodiff keeps
+    H, hd = cfg.n_heads, cfg.head_dim
+    return layer_saved_bytes_model(cfg, T, "full") + 2.0 * T * H * hd

@@ -104,20 +104,37 @@ def _local_grads(loss_fn, params, batch, grad_accum):
 # compute instead of waiting for all of it (DistPlan schedule='stream').
 # ---------------------------------------------------------------------------
 def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
-                    wire):
-    """Returns (loss, metrics, owned, sens_raw): `owned` aligns with
-    layout.buckets (the layered, reverse-layer-order layout) and holds each
-    bucket's already-reduced f32 shard; `sens_raw` maps a sensitive leaf's
-    flatten index to its (full, stacked) local gradient, reduced by the
-    caller on the bf16 fallback wire exactly as the post-hoc path does."""
+                    wire, grad_accum: int = 1):
+    """Returns (loss, metrics, owned, sens_done, sens_raw):
+
+    owned      aligns with layout.buckets (the layered, reverse-layer-order
+               layout) and holds each bucket's already-reduced f32 shard;
+    sens_done  maps a STACK-TAGGED sensitive leaf's path to its fully
+               reduced, restacked f32 gradient — each layer's slice was
+               issued on the bf16 fallback wire together with that layer's
+               FP8 bucket(s), from inside the backward;
+    sens_raw   maps the remaining (non-stacked: embeddings, final norms,
+               head) sensitive leaves' flatten indices to their local
+               gradients, reduced by the caller post-hoc as before.
+
+    Rematerialization composes through the MemoryPlan (train/memory.py):
+    each per-block jax.vjp wraps its layers per cfg.remat_policy ('pair'
+    coarsens the streaming granularity to two-layer blocks).
+
+    grad_accum > 1 streams too: the batch carries a leading microbatch
+    axis; every microbatch's bucket flats and sensitive slices accumulate
+    LOCALLY, and each quantize + reduce-scatter (and each bf16 psum) is
+    issued exactly once, from inside the LAST microbatch's backward — the
+    wire still hides behind backward compute, and the pre-agreed scales see
+    the full accumulated gradient (no per-microbatch quantization)."""
     from repro.dist import grad_comm
     from repro.dist.plan import bucket_flat_parts, path_str
     from repro.models.layers import apply_norm
     from repro.models.lm import (AUX_LOSS_COEF, _embed_tokens, _lm_logits,
                                  _xent, iter_layer_slices, layer_forward)
+    from repro.train.memory import MemoryPlan
 
-    tokens, targets = batch["tokens"], batch["targets"]
-    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+    mem = MemoryPlan.from_config(cfg)
 
     # static maps: full-tree flatten index -> position in each stack's
     # per-layer subtree flatten order (subtree traversal is the same sorted
@@ -132,79 +149,138 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
     layer_buckets = {}
     for bi, b in enumerate(layout.buckets):
         layer_buckets.setdefault((b.stack, b.layer), []).append((bi, b))
-    sens_idx = {i for i, _ in layout.sensitive}
+    sens_stacked = {s.index: s for s in layout.sensitive
+                    if s.stack is not None}
+    sens_other_idx = {s.index for s in layout.sensitive if s.stack is None}
+    entries = list(iter_layer_slices(cfg, params))
+    blocks = mem.blocks_of(entries)
 
-    # ---- staged forward (unrolled; the two-layer carry window defers each
-    # layer's scalar epilogue past the next layer's issue) -----------------
-    x, emb_vjp = jax.vjp(
-        lambda e: _embed_tokens(cfg, {"embed": e}, tokens), params["embed"])
-    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
-    recs = []                       # (stack, layer, vjp) in forward order
-    aux_total = jnp.float32(0.0)
-    pending = None
-    for stack, l, kind, moe, p_l in iter_layer_slices(cfg, params):
-        def f(p, xc, _kind=kind, _moe=moe):
-            return layer_forward(cfg, recipe, lplan, _kind, _moe, p, xc,
-                                 positions)
+    owned = [None] * len(layout.buckets)
+    flat_acc = [None] * len(layout.buckets)  # local microbatch accumulation
+    sens_layer_acc = {}             # (index, layer) -> local grad sum
+    sens_done_parts = {}            # index -> {layer: REDUCED grad slice}
+    sens_raw = {}                   # index -> local (accumulated) gradient
+    loss_sum = jnp.float32(0.0)
+    aux_sum = jnp.float32(0.0)
 
-        if cfg.remat:
-            f = jax.checkpoint(f, prevent_cse=False)
-        (x, a), vjp_l = jax.vjp(f, p_l, x)
-        recs.append((stack, l, vjp_l))
+    for m in range(grad_accum):
+        mb = batch if grad_accum == 1 else \
+            jax.tree.map(lambda a, _m=m: a[_m], batch)
+        emit = m == grad_accum - 1
+        inv = 1.0 if grad_accum == 1 else 1.0 / grad_accum
+        tokens, targets = mb["tokens"], mb["targets"]
+        mask = mb.get("mask", jnp.ones_like(tokens, jnp.float32))
+
+        # ---- staged forward (unrolled; the two-layer carry window defers
+        # each block's scalar epilogue past the next block's issue) --------
+        x, emb_vjp = jax.vjp(
+            lambda e: _embed_tokens(cfg, {"embed": e}, tokens),
+            params["embed"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        recs = []                   # (block entries, vjp) in forward order
+        aux_total = jnp.float32(0.0)
+        pending = None
+        for blk in blocks:
+            ps = tuple(e[4] for e in blk)
+
+            def f(ps_, xc, _km=tuple((e[2], e[3]) for e in blk)):
+                a_blk = jnp.float32(0.0)
+                for p, (kind, moe) in zip(ps_, _km):
+                    xc, a = layer_forward(cfg, recipe, lplan, kind, moe, p,
+                                          xc, positions)
+                    a_blk = a_blk + a
+                return xc, a_blk
+
+            (x, a), vjp_b = jax.vjp(mem.wrap(f), ps, x)
+            recs.append((blk, vjp_b))
+            if pending is not None:
+                aux_total = aux_total + pending
+            pending = a
         if pending is not None:
             aux_total = aux_total + pending
-        pending = a
-    if pending is not None:
-        aux_total = aux_total + pending
 
-    hp = {"final_norm_s": params["final_norm_s"]}
-    if "final_norm_b" in params:
-        hp["final_norm_b"] = params["final_norm_b"]
-    hp["embed" if cfg.tie_embeddings else "lm_head"] = \
-        params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        hp = {"final_norm_s": params["final_norm_s"]}
+        if "final_norm_b" in params:
+            hp["final_norm_b"] = params["final_norm_b"]
+        hp["embed" if cfg.tie_embeddings else "lm_head"] = \
+            params["embed"] if cfg.tie_embeddings else params["lm_head"]
 
-    def head_f(hp_, xf):
-        xn = apply_norm(cfg.norm, xf,
-                        {"final_norm_s": hp_["final_norm_s"],
-                         "final_norm_b": hp_.get("final_norm_b")},
-                        "final_norm")
-        return _xent(_lm_logits(cfg, hp_, xn, None), targets, mask)
+        def head_f(hp_, xf, _targets=targets, _mask=mask):
+            xn = apply_norm(cfg.norm, xf,
+                            {"final_norm_s": hp_["final_norm_s"],
+                             "final_norm_b": hp_.get("final_norm_b")},
+                            "final_norm")
+            return _xent(_lm_logits(cfg, hp_, xn, None), _targets, _mask)
 
-    xent_loss, head_vjp = jax.vjp(head_f, hp, x)
-    loss = xent_loss + AUX_LOSS_COEF * aux_total
+        xent_loss, head_vjp = jax.vjp(head_f, hp, x)
+        loss_sum = loss_sum + xent_loss + AUX_LOSS_COEF * aux_total
+        aux_sum = aux_sum + aux_total
 
-    # ---- streaming backward: reverse layer order, wire-on-the-way --------
-    g_hp, g_x = head_vjp(jnp.float32(1.0))
-    owned = [None] * len(layout.buckets)
-    sens_parts = {}                 # full index -> {layer: grad slice}
-    g_aux = jnp.float32(AUX_LOSS_COEF)      # d loss / d aux_l
-    for stack, l, vjp_l in reversed(recs):
-        g_pl, g_x = vjp_l((g_x, g_aux))
-        g_leaves = jax.tree.leaves(g_pl)
-        pos = stack_pos[stack]
-        for bi, b in layer_buckets.get((stack, l), ()):
-            flat = bucket_flat_parts(b, lambda s: g_leaves[pos[s.index]])
-            # issued HERE, between layer l's and layer l-1's backward GEMMs:
-            # the pre-agreed-scale quantize + single-uint8-message RS
-            owned[bi] = grad_comm.reduce_scatter_bucket(flat, axis, n_dp,
-                                                        wire)
-        for i in pos:
-            if i in sens_idx:
-                sens_parts.setdefault(i, {})[l] = g_leaves[pos[i]]
+        # ---- streaming backward: reverse layer order, wire-on-the-way ----
+        g_hp, g_x = head_vjp(jnp.float32(1.0))
+        g_aux = jnp.float32(AUX_LOSS_COEF)      # d loss / d aux_l
+        for blk, vjp_b in reversed(recs):
+            g_ps, g_x = vjp_b((g_x, g_aux))
+            for (stack, l, _k, _mo, _p), g_pl in zip(reversed(blk),
+                                                     reversed(g_ps)):
+                g_leaves = jax.tree.leaves(g_pl)
+                pos = stack_pos[stack]
+                for bi, b in layer_buckets.get((stack, l), ()):
+                    flat = bucket_flat_parts(
+                        b, lambda s: g_leaves[pos[s.index]])
+                    if flat_acc[bi] is not None:
+                        flat = flat + flat_acc[bi]
+                    if emit:
+                        # issued HERE, between layer l's and layer l-1's
+                        # backward GEMMs: the pre-agreed-scale quantize +
+                        # single-uint8-message RS (of the microbatch MEAN)
+                        owned[bi] = grad_comm.reduce_scatter_bucket(
+                            flat * inv if grad_accum > 1 else flat,
+                            axis, n_dp, wire)
+                        flat_acc[bi] = None
+                    else:
+                        flat_acc[bi] = flat
+                for i in pos:
+                    g_s = g_leaves[pos[i]]
+                    if i in sens_stacked:
+                        key = (i, l)
+                        if key in sens_layer_acc:
+                            g_s = g_s + sens_layer_acc[key]
+                        if emit:
+                            # the layer's bf16 psum rides with its bucket(s)
+                            sens_done_parts.setdefault(i, {})[l] = \
+                                grad_comm.reduce_sensitive(
+                                    g_s * inv if grad_accum > 1 else g_s,
+                                    axis, n_dp, wire)
+                            sens_layer_acc.pop(key, None)
+                        else:
+                            sens_layer_acc[key] = g_s
+                    elif i in sens_other_idx:   # non-layered fallback leaf
+                        sens_raw[i] = g_s if i not in sens_raw \
+                            else sens_raw[i] + g_s
 
-    g_embed = emb_vjp(g_x)[0]
-    if cfg.tie_embeddings:
-        g_embed = g_embed + g_hp["embed"].astype(g_embed.dtype)
-    sens_raw = {i: jnp.stack([pieces[l] for l in range(len(pieces))])
-                for i, pieces in sens_parts.items()}
-    sens_raw[by_path["embed"]] = g_embed
-    sens_raw[by_path["final_norm_s"]] = g_hp["final_norm_s"]
-    if "final_norm_b" in by_path:
-        sens_raw[by_path["final_norm_b"]] = g_hp["final_norm_b"]
-    if not cfg.tie_embeddings:
-        sens_raw[by_path["lm_head"]] = g_hp["lm_head"]
-    metrics = {"aux_loss": aux_total, "loss": loss}
-    return loss, metrics, owned, sens_raw
+        g_embed = emb_vjp(g_x)[0]
+        if cfg.tie_embeddings:
+            g_embed = g_embed + g_hp["embed"].astype(g_embed.dtype)
+        ends = {"embed": g_embed,
+                "final_norm_s": g_hp["final_norm_s"]}
+        if "final_norm_b" in by_path:
+            ends["final_norm_b"] = g_hp["final_norm_b"]
+        if not cfg.tie_embeddings:
+            ends["lm_head"] = g_hp["lm_head"]
+        for name, g in ends.items():
+            i = by_path[name]
+            sens_raw[i] = g if i not in sens_raw else sens_raw[i] + g
+
+    if grad_accum > 1:
+        sens_raw = {i: g / grad_accum for i, g in sens_raw.items()}
+    sens_done = {
+        sens_stacked[i].path: jnp.stack([pieces[l]
+                                         for l in range(len(pieces))])
+        for i, pieces in sens_done_parts.items()}
+    loss = loss_sum / grad_accum
+    metrics = {"aux_loss": aux_sum / grad_accum, "loss": loss}
+    return loss, metrics, owned, sens_done, sens_raw
 
 
 # ---------------------------------------------------------------------------
@@ -273,10 +349,14 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 # staged layer program: per-layer backward, bucket i's
                 # quantize + reduce-scatter issued the moment layer i's
                 # grads exist (reverse layer order) — the DP wire hides
-                # behind the remaining backward compute
-                loss, fwd_metrics, owned, sens_raw = _streamed_grads(
-                    cfg, recipe, local_plan, params, batch, layout, axis,
-                    n_dp, dist.wire)
+                # behind the remaining backward compute.  Stack-tagged
+                # sensitive leaves stream per layer on the bf16 wire;
+                # grad_accum > 1 accumulates locally and wires once on the
+                # last microbatch.
+                loss, fwd_metrics, owned, sens_done, sens_raw = \
+                    _streamed_grads(cfg, recipe, local_plan, params, batch,
+                                    layout, axis, n_dp, dist.wire,
+                                    grad_accum=grad_accum)
             else:
                 loss, fwd_metrics, grads = _local_grads(
                     loss_fn, params, batch, grad_accum)
@@ -289,8 +369,10 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                     bucket_flat(b, gleaves), axis, n_dp, dist.wire)
                     for b in layout.buckets]
                 sens_raw = {i: gleaves[i] for i, _ in layout.sensitive}
-            sens_g = {p: grad_comm.reduce_sensitive(sens_raw[i], axis, n_dp,
-                                                    dist.wire)
+                sens_done = {}
+            sens_g = {p: sens_done[p] if p in sens_done
+                      else grad_comm.reduce_sensitive(sens_raw[i], axis,
+                                                      n_dp, dist.wire)
                       for i, p in layout.sensitive}
 
             # global grad norm in one fused f32 scalar pass: each replica

@@ -139,3 +139,42 @@ def test_staged_streaming_backward_stays_two_casts():
     # the wire + optimizer-state quantizes exist but are FUSED kind
     assert ("fused_quantize", "dp_wire") in by
     assert ("fused_quantize", "opt_state") in by
+
+
+@pytest.mark.parametrize("policy", ["none", "full", "fp8_resident", "pair"])
+def test_streamed_casts_under_every_remat_policy(policy):
+    """MemoryPlan extension of the invariant above: the activation-
+    residency policy changes WHAT is saved, never the cast structure —
+    per layer, ONE backward island quantize under every policy, one entry
+    quantize per forward trace (plus one per remat retrace when a policy
+    checkpoints), and no new explicit cast tags."""
+    import dataclasses
+    from repro.compat import make_mesh
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.dist import DistPlan
+    from repro.models.lm import ParallelPlan
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(get_arch("qwen15_05b").reduced(),
+                              remat_policy=policy)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=1e-3)
+    recipe = get_recipe("fp8_flow")
+    dist = DistPlan(wire="fp8", schedule="stream")
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
+    step = make_train_step(cfg, recipe, plan, opt, dist=dist,
+                           total_steps=10, warmup_steps=2)
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    with mesh, casts.ledger() as led:
+        jax.jit(step)(state, make_batch(data, 0))
+    by = led.by_tag()
+    assert by.get(("quantize", "q_bwd_island"), 0) == cfg.n_layers, by
+    expected_entry = cfg.n_layers * (1 if policy == "none" else 2)
+    assert by.get(("quantize", "q_entry"), 0) == expected_entry, by
+    tags = {t for (k, t) in by
+            if k in ("quantize", "dequantize") and not t.startswith("q_w")}
+    assert tags == {"q_entry", "q_bwd_island"}, by
+    assert not [e for e in led.events if e.kind == "dequantize"]
