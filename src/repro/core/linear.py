@@ -46,9 +46,16 @@ from repro.core.transpose import transpose_direct, transpose_naive
 # ---------------------------------------------------------------------------
 # Path selection: Pallas kernels (TPU / interpret) vs pure-XLA equivalents.
 # ---------------------------------------------------------------------------
-def _ggemm(recipe: Recipe, qx: QTensor, qw: QTensor, out_dtype=jnp.bfloat16):
+def _ggemm(recipe: Recipe, qx: QTensor, qw: QTensor, out_dtype=jnp.bfloat16,
+           masked_m=None):
+    """masked_m (int32 (E,), per-expert live rows) routes the Pallas path to
+    the masked-layout kernel — bitwise-equal on the zero-padded dispatch
+    buffers, so the XLA path may ignore it (padded rows are zero anyway)."""
     if recipe.use_pallas:
         from repro.kernels import ops
+        if masked_m is not None:
+            return ops.grouped_gemm_fp8_masked(qx, qw,
+                                               masked_m).astype(out_dtype)
         return ops.grouped_gemm_fp8(qx, qw).astype(out_dtype)
     # XLA path mirrors the MXU contract: operands dequantized to bf16 (EXACT
     # for e4m3 payloads x po2 scales — bf16 has more mantissa than e4m3) and
@@ -59,10 +66,14 @@ def _ggemm(recipe: Recipe, qx: QTensor, qw: QTensor, out_dtype=jnp.bfloat16):
                       preferred_element_type=jnp.float32).astype(out_dtype)
 
 
-def _ggemm_nt(recipe: Recipe, qa: QTensor, qb: QTensor, out_dtype=jnp.float32):
+def _ggemm_nt(recipe: Recipe, qa: QTensor, qb: QTensor, out_dtype=jnp.float32,
+              masked_m=None):
     """(E,M,C) x (E,N,C) -> (E,M,N), contraction over last axis of both."""
     if recipe.use_pallas:
         from repro.kernels import ops
+        if masked_m is not None:
+            return ops.grouped_gemm_nt_fp8_masked(qa, qb,
+                                                  masked_m).astype(out_dtype)
         return ops.grouped_gemm_nt_fp8(qa, qb).astype(out_dtype)
     af = _dequantize_nocount(qa, jnp.bfloat16)
     bf = _dequantize_nocount(qb, jnp.bfloat16)
@@ -70,11 +81,14 @@ def _ggemm_nt(recipe: Recipe, qa: QTensor, qb: QTensor, out_dtype=jnp.float32):
                       preferred_element_type=jnp.float32).astype(out_dtype)
 
 
-def _ggemm_quant_out(recipe: Recipe, qx: QTensor, qw: QTensor) -> QTensor:
+def _ggemm_quant_out(recipe: Recipe, qx: QTensor, qw: QTensor,
+                     masked_m=None) -> QTensor:
     """Grouped GEMM with fused FP8-quantizing epilogue (Dgrad1 path)."""
     casts.record("fused_quantize", "dgrad_epilogue", qx.data.shape[0])
     if recipe.use_pallas:
         from repro.kernels import ops
+        if masked_m is not None:
+            return ops.grouped_gemm_fp8_masked_quant_out(qx, qw, masked_m)
         return ops.grouped_gemm_fp8_quant_out(qx, qw)
     out = _ggemm(recipe, qx, qw, jnp.bfloat16)
     return quantize_rowwise(out, scale_mode=recipe.scale_mode,
@@ -198,12 +212,15 @@ def _act_bwd(act: str, h, ga):
 # ---------------------------------------------------------------------------
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def expert_ffn(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
-               x_in, w13, w2):
+               x_in, w13, w2, masked_m=None):
     """wg_axes: mesh axes to psum weight-gradients over (the DP reduction —
     tokens are sharded over them while weights are replicated).  gx_axes:
     axes to psum the input-gradient over (TP-sharded expert case).  Both are
-    () outside shard_map."""
-    y, _ = _ffn_fwd(recipe, act, wg_axes, gx_axes, x_in, w13, w2)
+    () outside shard_map.  masked_m: optional per-expert live-row counts
+    (int32 (E,)) — routes the fp8_flow Pallas grouped GEMMs (fwd AND every
+    backward Dgrad/Wgrad) through the masked layout; other recipes ignore
+    it."""
+    y, _ = _ffn_fwd(recipe, act, wg_axes, gx_axes, x_in, w13, w2, masked_m)
     return y
 
 
@@ -217,7 +234,7 @@ def _quant_weights(recipe: Recipe, w13, w2):
 
 
 def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
-             x_in, w13, w2):
+             x_in, w13, w2, masked_m=None):
     name = recipe.name
     if name == "bf16":
         x = x_in
@@ -230,9 +247,10 @@ def _ffn_fwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
     qw13, qw2 = _quant_weights(recipe, w13, w2)
 
     if name == "fp8_flow":
-        y, (qx, qa, h_saved) = ffn_fwd_fp8_core(recipe, act, x_in, qw13, qw2)
+        y, (qx, qa, h_saved) = ffn_fwd_fp8_core(recipe, act, x_in, qw13, qw2,
+                                                masked_m=masked_m)
         wit = (jnp.zeros((0,), w13.dtype), jnp.zeros((0,), w2.dtype))
-        return y, (qx, qa, h_saved, qw13, qw2, wit)
+        return y, (qx, qa, h_saved, qw13, qw2, wit, masked_m)
 
     if name == "naive_fp8":
         # x arrives in BF16 (the dispatch DQ'd it — Fig 2c's Q/DQ-around-comm)
@@ -270,8 +288,15 @@ def _psum(v, axes):
 # pipeline in core/moe.py, which hand-writes its backward so the one explicit
 # island quantize can be hoisted OUT of the per-chunk loop).
 # ---------------------------------------------------------------------------
+def _use_swiglu_epilogue(recipe: Recipe, act: str, masked_m) -> bool:
+    """The fused SwiGLU+quant GEMM-1 epilogue applies on the masked Pallas
+    path only, and only when h need not be materialized for saving."""
+    return (recipe.swiglu_epilogue and act == "swiglu" and recipe.use_pallas
+            and masked_m is not None and not recipe.save_h)
+
+
 def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
-                     qw2: QTensor):
+                     qw2: QTensor, masked_m=None):
     """fp8_flow grouped FFN forward on an already-quantized input.
     Returns (y bf16, (qx, qa, h_saved)) — the residuals the backward core
     needs (the weights the caller already holds).  qx/qa come back
@@ -279,7 +304,19 @@ def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
     the MemoryPlan 'fp8_resident' policy (train/memory.py) keeps the
     QTensor stage outputs resident across the forward/backward boundary."""
     qx = tag_qtensor(qx, "fp8_qx")
-    h = _ggemm(recipe, qx, qw13, jnp.bfloat16)              # BF16 island in
+    if _use_swiglu_epilogue(recipe, act, masked_m):
+        # GEMM-1 with the SwiGLU + re-quantize fused into its last K-step:
+        # the BF16 island lives only in VMEM (bitwise the unfused pair).
+        from repro.kernels import ops
+        # same ledger entry as the unfused kernel pair (h.size = E*C*2F)
+        casts.record("fused_quantize", "swiglu_quant",
+                     qx.data.shape[0] * qx.data.shape[1] * qw13.data.shape[-1])
+        qa = ops.grouped_gemm_swiglu_quant_masked(qx, qw13, masked_m)
+        qa = tag_qtensor(qa, "fp8_qa")
+        y = _ggemm(recipe, qa, qw2, jnp.bfloat16, masked_m=masked_m)
+        return y, (qx, qa, None)
+    h = _ggemm(recipe, qx, qw13, jnp.bfloat16,
+               masked_m=masked_m)                           # BF16 island in
     h = tag_saveable(h, "stage_ffn_h")
     if act == "swiglu":
         qa = _fused_swiglu_quant(recipe, h)
@@ -289,27 +326,32 @@ def ffn_fwd_fp8_core(recipe: Recipe, act: str, qx: QTensor, qw13: QTensor,
         qa = quantize_rowwise(_act_fwd(act, h), scale_mode=recipe.scale_mode,
                               tag="act_quant", kind="fused_quantize_inner")
     qa = tag_qtensor(qa, "fp8_qa")
-    y = _ggemm(recipe, qa, qw2, jnp.bfloat16)
+    y = _ggemm(recipe, qa, qw2, jnp.bfloat16, masked_m=masked_m)
     return y, (qx, qa, h if recipe.save_h else None)
 
 
 def ffn_bwd_fp8_core(recipe: Recipe, act: str, gx_axes: tuple, qx: QTensor,
                      qa: QTensor, h_saved, qw13: QTensor, qw2: QTensor,
-                     qg: QTensor):
+                     qg: QTensor, masked_m=None):
     """fp8_flow grouped FFN backward given an ALREADY-QUANTIZED output
     cotangent ``qg`` — the explicit BF16-island quantize happens in the
     caller (once per step, even when the FFN itself runs per micro-chunk).
     Returns (gx QTensor, wg13 f32, wg2 f32): the input-gradient is FP8 on
     both branches (fused Dgrad1 epilogue, or post-psum quantize when
     gx_axes); weight grads are UNREDUCED (the caller psums over its DP
-    axes)."""
+    axes).  masked_m skips dead capacity tiles in all five grouped GEMMs
+    (Dgrad rows beyond the count are zero because the combine's p_exp
+    weighting zeros dead slots upstream; NT forms skip zero token
+    columns)."""
     # Dgrad2: FP8 x FP8, block-transposed weight (exact relabeling)
-    ga = _ggemm(recipe, qg, _block_t(qw2), jnp.bfloat16)
+    ga = _ggemm(recipe, qg, _block_t(qw2), jnp.bfloat16, masked_m=masked_m)
     # Wgrad2 via scaling-aware DIRECT transposes — zero casts
-    wg2 = _ggemm_nt(recipe, _t_direct(recipe, qa), _t_direct(recipe, qg))
+    wg2 = _ggemm_nt(recipe, _t_direct(recipe, qa), _t_direct(recipe, qg),
+                    masked_m=masked_m)
     # BF16 island: recompute h (FP8 activation checkpointing) or reuse
     h = h_saved if h_saved is not None else _ggemm(recipe, qx, qw13,
-                                                   jnp.bfloat16)
+                                                   jnp.bfloat16,
+                                                   masked_m=masked_m)
     gh = _act_bwd(act, h, ga)
     casts.record("fused_quantize", "dact_quant", gh.size)
     qgh = quantize_rowwise(gh, scale_mode=recipe.scale_mode,
@@ -318,16 +360,18 @@ def ffn_bwd_fp8_core(recipe: Recipe, act: str, gx_axes: tuple, qx: QTensor,
         # TP-sharded experts: the input-gradient partial-sums over the
         # F-shards first; the fused quantizing epilogue runs after the
         # psum (a reduction — kept out of FP8 by design).
-        gx_f32 = _ggemm(recipe, qgh, _block_t(qw13), jnp.float32)
+        gx_f32 = _ggemm(recipe, qgh, _block_t(qw13), jnp.float32,
+                        masked_m=masked_m)
         casts.record("fused_quantize", "dgrad_epilogue", gx_f32.size)
         gx = quantize_rowwise(_psum(gx_f32, gx_axes),
                               scale_mode=recipe.scale_mode,
                               tag="dgrad_out", kind="fused_quantize_inner")
     else:
         # Dgrad1 with fused quantizing epilogue -> FP8 input-gradient
-        gx = _ggemm_quant_out(recipe, qgh, _block_t(qw13))
+        gx = _ggemm_quant_out(recipe, qgh, _block_t(qw13), masked_m=masked_m)
     # Wgrad1, again via direct transposes
-    wg13 = _ggemm_nt(recipe, _t_direct(recipe, qx), _t_direct(recipe, qgh))
+    wg13 = _ggemm_nt(recipe, _t_direct(recipe, qx), _t_direct(recipe, qgh),
+                     masked_m=masked_m)
     return gx, wg13, wg2
 
 
@@ -347,17 +391,18 @@ def _ffn_bwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
         wg13 = jnp.einsum("eck,ecf->ekf", x.astype(jnp.float32),
                           gh.astype(jnp.float32))
         return (_psum(gx, gx_axes), _psum(wg13, wg_axes).astype(w13.dtype),
-                _psum(wg2, wg_axes).astype(w2.dtype))
+                _psum(wg2, wg_axes).astype(w2.dtype), None)
 
     if name == "fp8_flow":
-        qx, qa, h_saved, qw13, qw2, (wit13, wit2) = res
+        qx, qa, h_saved, qw13, qw2, (wit13, wit2), masked_m = res
         w13_dt, w2_dt = wit13.dtype, wit2.dtype
         # ---- the single explicit backward cast: BF16 island -> FP8 ----
         qg = _q_row(recipe, gy, "q_bwd_island")
         gx_q, wg13, wg2 = ffn_bwd_fp8_core(recipe, act, gx_axes, qx, qa,
-                                           h_saved, qw13, qw2, qg)
+                                           h_saved, qw13, qw2, qg,
+                                           masked_m=masked_m)
         return (gx_q, _psum(wg13, wg_axes).astype(w13_dt),
-                _psum(wg2, wg_axes).astype(w2_dt))
+                _psum(wg2, wg_axes).astype(w2_dt), None)
 
     if name == "naive_fp8":
         qx, qa, qw13, qw2, (wit13, wit2) = res
@@ -379,7 +424,7 @@ def _ffn_bwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
         qghT = _q_row(recipe, jnp.swapaxes(gh, -1, -2), "q_bwd_wgrad1_g")  # (12)
         wg13 = _ggemm_nt(recipe, qxT, qghT)
         return (_psum(gx, gx_axes), _psum(wg13, wg_axes).astype(w13_dt),
-                _psum(wg2, wg_axes).astype(w2_dt))
+                _psum(wg2, wg_axes).astype(w2_dt), None)
 
     if name == "blockwise":
         x, h, qw13, qw2, (wit13, wit2) = res
@@ -398,7 +443,7 @@ def _ffn_bwd(recipe: Recipe, act: str, wg_axes: tuple, gx_axes: tuple,
         qxT = _q_row(recipe, jnp.swapaxes(x, -1, -2), "q_bwd_wgrad1_x")
         wg13 = _ggemm_nt(recipe, qxT, qghT)
         return (_psum(gx, gx_axes), _psum(wg13, wg_axes).astype(w13_dt),
-                _psum(wg2, wg_axes).astype(w2_dt))
+                _psum(wg2, wg_axes).astype(w2_dt), None)
 
     raise ValueError(name)
 

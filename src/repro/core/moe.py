@@ -129,6 +129,23 @@ def _expert_plan(recv_expert, E_loc: int, C_exp: int):
     return row_map_exp, ret_map
 
 
+def _expert_loads(row_map_exp, E_loc: int, C_exp: int):
+    """Per-expert live-row counts from the expert plan — the ``masked_m``
+    vector of the masked grouped-GEMM layout.  _expert_plan fills each
+    expert's slots contiguously from 0, so the count IS the live prefix
+    length (rows >= count are the zero-padded dead slots)."""
+    return jnp.sum((row_map_exp.reshape(E_loc, C_exp) >= 0),
+                   axis=1, dtype=jnp.int32)
+
+
+def _masked_m_or_none(recipe: Recipe, row_map_exp, E_loc: int, C_exp: int):
+    """masked_m for the grouped FFN when the recipe opts in (fp8_flow only —
+    the masked kernels live on the FP8 pathway; other recipes ignore it)."""
+    if recipe.masked_experts and recipe.name == "fp8_flow":
+        return _expert_loads(row_map_exp, E_loc, C_exp)
+    return None
+
+
 # ---------------------------------------------------------------------------
 # QTensor-aware permute with explicit VJP (casting-free routing of FP8
 # cotangents through injective maps).
@@ -299,8 +316,10 @@ def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
         ffn_in = x_exp.reshape(E_loc, C_exp, D)
 
     # ---- grouped expert FFN (the recipe heart) -----------------------------
+    masked_m = _masked_m_or_none(recipe, row_map_exp, E_loc, C_exp)
     y_exp = tag_saveable(
-        expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2),
+        expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2,
+                   masked_m),
         "stage_expert_out")
 
     # expert-side prob weighting (grad wrt p flows through this product)
@@ -360,8 +379,10 @@ def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
         ffn_in = _take_rows(x.astype(jnp.bfloat16), tok_of_slot)
         ffn_in = ffn_in.reshape(E, C_exp, D)
 
+    masked_m = _masked_m_or_none(recipe, row_map_exp, E, C_exp)
     y_exp = tag_saveable(expert_ffn(recipe, cfg.act, cfg.dp_axes, (tp_axis,),
-                                    ffn_in, w13, w2),        # F-sliced partial
+                                    ffn_in, w13, w2,
+                                    masked_m),               # F-sliced partial
                          "stage_expert_out")
     if combine_mode == "psum_first":
         y_exp = jax.lax.psum(y_exp, tp_axis)                 # TP reduction
@@ -439,7 +460,8 @@ def decode_stage_expert(recipe: Recipe, cfg: MoEConfig, ffn_in, w13, w2,
     D = cfg.d_model
     grouped = ffn_in.data if isinstance(ffn_in, QTensor) else ffn_in
     E_loc, C_dec = grouped.shape[0], grouped.shape[1]
-    y_exp = expert_ffn(recipe, cfg.act, (), (), ffn_in, w13, w2)
+    masked_m = _masked_m_or_none(recipe, row_map_exp, E_loc, C_dec)
+    y_exp = expert_ffn(recipe, cfg.act, (), (), ffn_in, w13, w2, masked_m)
     p_of_slot = jnp.where(
         row_map_exp >= 0,
         p_c.reshape(-1)[jnp.maximum(row_map_exp, 0)], 0.0)
@@ -723,8 +745,9 @@ def _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2):
         d_e, s_e = _permute_pad_fields(d_r, s_r, rme, recipe.use_pallas)
         qx_c = QTensor(d_e.reshape(E_loc, C_exp, D),
                        s_e.reshape(E_loc, C_exp, D // TILE), (1, 1, TILE))
+        mm_c = _masked_m_or_none(recipe, rme, E_loc, C_exp)
         y_exp, (qx_c, qa_c, h_c) = ffn_fwd_fp8_core(recipe, cfg.act, qx_c,
-                                                    qw13, qw2)
+                                                    qw13, qw2, mm_c)
         y_exp = tag_saveable(y_exp, "stage_expert_out")
         p_exp = _take_rows(p_r[:, None], rme).reshape(E_loc, C_exp)
         y_w = y_exp * p_exp[..., None].astype(y_exp.dtype)
@@ -735,7 +758,7 @@ def _flow_fwd_impl(recipe, cfg, n, x, p, ids, w13, w2):
         ys.append(jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
                                       num_segments=Tc + 1)[:Tc])
         saved.append((rms, plans[c][2], rme, ret, qx_c, qa_c, h_c, p_exp,
-                      y_exp))
+                      y_exp, mm_c))
         recv = nxt
     y = jnp.concatenate(ys, axis=0).astype(x.dtype)
     drop = jnp.mean(jnp.stack([pl[3] for pl in plans]))
@@ -771,7 +794,7 @@ def _ocf_bwd(recipe, cfg, n, res, ct):
     # ---- stage 1: per-chunk reverse combine (bf16 collectives pipeline) ----
     g_yexp, g_pexp = [], []
     for c in range(n):
-        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp = saved[c]
+        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp, mm_c = saved[c]
         g_c = jax.lax.slice_in_dim(g_y, c * Tc, (c + 1) * Tc)
         g_back = _take_rows(g_c.astype(jnp.float32), rms)     # (R, D)
         g_ret = _a2a(g_back.astype(jnp.bfloat16), cfg.ep_axis)
@@ -809,14 +832,14 @@ def _ocf_bwd(recipe, cfg, n, res, ct):
 
     pending = None
     for c in range(n):
-        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp = saved[c]
+        rms, sa, rme, ret, qx_c, qa_c, h_c, p_exp, y_exp, mm_c = saved[c]
         qg_c = QTensor(
             jax.lax.slice_in_dim(qg_all.data, c * C_exp, (c + 1) * C_exp,
                                  axis=1),
             jax.lax.slice_in_dim(qg_all.scale, c * C_exp, (c + 1) * C_exp,
                                  axis=1), qg_all.tile)
         gxq, wg13_c, wg2_c = ffn_bwd_fp8_core(recipe, cfg.act, (), qx_c, qa_c,
-                                              h_c, qw13, qw2, qg_c)
+                                              h_c, qw13, qw2, qg_c, mm_c)
         wg13 = wg13 + wg13_c
         wg2 = wg2 + wg2_c
         # inverse expert-grouping permute (FP8-exact), then ONE fused reverse

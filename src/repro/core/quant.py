@@ -11,6 +11,18 @@ A ``QTensor`` carries:
   scale : f32 power-of-two scales, one per tile; shape[i] = data.shape[i]/tile[i]
   tile  : static per-axis tile sizes, e.g. (1, 128) row-wise, (128, 128) weights
 
+Tile-metadata convention (normative — every producer and consumer in the
+repo follows it, and ``tests/test_kernels.py`` asserts it on the kernel
+wrappers):
+
+  * ``len(tile) == data.ndim`` always.  Leading batch/expert axes get
+    explicit 1s — e.g. a (E, C, K) row-tiled activation is ``(1, 1, TILE)``,
+    never a 2-tuple broadcast against a 3-D payload.
+  * Row-wise tiles are ``(1,) * (ndim - 1) + (TILE,)`` — use ``row_tile``.
+  * Weight blocks are ``(1,) * (ndim - 2) + (TILE, TILE)``.
+  * ``scale.shape[i] * tile[i] == data.shape[i]`` for every axis
+    (``_scale_shape`` enforces divisibility at quantize time).
+
 Every quantize/dequantize call is recorded on the active CastLedger (see
 ``casts.py``) — this is how the 12-vs-2 cast accounting of Fig. 2 is asserted.
 """
@@ -97,6 +109,12 @@ def tag_qtensor(q: "QTensor", name: str) -> "QTensor":
     u8 = tag_saveable(u8, f"{name}_data")
     data = jax.lax.bitcast_convert_type(u8, q.data.dtype)
     return QTensor(data, tag_saveable(q.scale, f"{name}_scale"), q.tile)
+
+
+def row_tile(ndim: int) -> Tuple[int, ...]:
+    """Canonical row-wise tile metadata for an ndim-D payload: last axis in
+    TILE-wide tiles, every other axis at element granularity."""
+    return (1,) * (ndim - 1) + (TILE,)
 
 
 def _scale_shape(shape, tile):
@@ -191,8 +209,7 @@ def quantize(x: jax.Array, tile, fmt=E4M3, scale_mode: str = "po2",
 def quantize_rowwise(x: jax.Array, fmt=E4M3, scale_mode="po2", tag="q_row",
                      kind="quantize") -> QTensor:
     """1 x TILE tiles along the last axis (Fprop/Dgrad activation layout)."""
-    tile = (1,) * (x.ndim - 1) + (TILE,)
-    return quantize(x, tile, fmt, scale_mode, tag=tag, kind=kind)
+    return quantize(x, row_tile(x.ndim), fmt, scale_mode, tag=tag, kind=kind)
 
 
 def quantize_colwise(x: jax.Array, fmt=E4M3, scale_mode="po2", tag="q_col") -> QTensor:

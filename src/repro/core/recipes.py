@@ -36,6 +36,16 @@ class Recipe:
     # Store the dispatched expert input in FP8 for backward (always true for
     # fp8 recipes; bf16 recipe saves bf16).
     e5m2_grads: bool = False  # use E5M2 for gradient tensors (wider range)
+    # Route expert grouped GEMMs through the MASKED layout: per-expert live
+    # row counts (from the dispatch plan) skip dead capacity tiles on the
+    # MXU.  Bitwise-equal to the padded layout on the zero-padded dispatch
+    # buffers, so the padded path stays available as the A/B baseline.
+    masked_experts: bool = False
+    # Fuse the inter-GEMM SwiGLU + row-wise e4m3 re-quantize into GEMM-1's
+    # last-K-step epilogue (masked Pallas path only; requires masked_experts,
+    # use_pallas and save_h=False — h never materializes, so there is
+    # nothing to save).
+    swiglu_epilogue: bool = False
 
     def __post_init__(self):
         if self.name not in RECIPES:

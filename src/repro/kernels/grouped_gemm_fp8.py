@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: FP8 grouped GEMM with per-tile scaling (DeepGEMM-on-TPU).
+"""Pallas TPU kernels: FP8 grouped GEMM with per-tile scaling (DeepGEMM-on-TPU).
 
 out[e] = (x[e] . sx[e]) @ (w[e] . sw[e])   for every expert e, where
   x  : (E, C, K)  e4m3, row-wise (1,TILE) scales sx (E, C, K/TILE)
@@ -7,11 +7,36 @@ out[e] = (x[e] . sx[e]) @ (w[e] . sw[e])   for every expert e, where
 
 Grid: (E, C/BM, N/BN, K/BK) with BK == TILE so each K-step contributes one
 scale product; partials accumulate in an f32 VMEM scratch (MXU contract:
-fp8 x fp8 -> f32).  The expert dimension rides the grid, so ragged groups
-cost only their padded tiles — padding rows are zero and contribute nothing.
+fp8 x fp8 -> f32).  Block shapes are 128-aligned for the MXU; x/w blocks
+stream HBM->VMEM once per (m,n,k) tile visit with the accumulator resident
+across the K loop.
 
-Block shapes are 128-aligned for the MXU; x/w blocks stream HBM->VMEM once
-per (m,n,k) tile visit with the accumulator resident across the K loop.
+Two layouts:
+
+* PADDED (the seed): every expert is padded to the full capacity C; padding
+  rows are zero and contribute nothing, but their tiles still ride through
+  the MXU.
+* MASKED (DeepGEMM/LightLLM ``masked_group_gemm`` layout): a per-expert
+  ``masked_m`` count vector (int32 (E,), scalar-prefetched into SMEM) tells
+  each M-tile whether ANY of its rows are live; tiles with
+  ``m * BM >= masked_m[e]`` skip the dot+scale work entirely via ``pl.when``
+  and write zeros in the epilogue, so expert-load imbalance becomes a
+  compute no-op instead of padded-tile MXU work.  ``expected_m`` is a STATIC
+  tuning hint (the per-expert load the caller expects, e.g.
+  ``ceil(T * top_k / E)``): it sizes the FLOPs/bytes model in
+  ``benchmarks/masked_moe_ab.py`` and lets the ``ops.py`` wrappers fall back
+  to the padded kernel when ``expected_m >= C`` (masking would only add
+  scalar-prefetch overhead).  Masking is TILE-GRANULAR: rows beyond
+  ``masked_m[e]`` inside a partially-live tile are computed from whatever
+  payload is there, so callers that need row-exact zeros must zero-pad the
+  dead rows (the fused permute+pad dispatch layout guarantees this).
+
+The masked GEMM-1 variant fuses the inter-GEMM SwiGLU + row-wise e4m3
+re-quantize into the ``k == nk-1`` epilogue (paper §3.3.2 taken into the
+kernel layer): gate/up column tiles accumulate in two scratches, the
+epilogue rounds both through bf16 (bit-identical to the unfused
+bf16-island h), applies silu(gate)*up and quantizes per (row, TILE)-tile —
+the expert intermediate never materializes in bf16 in HBM.
 """
 from __future__ import annotations
 
@@ -23,6 +48,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fp8 import TILE
+from repro.kernels.quantize import kernel_po2_scale
 
 BM = 128
 BN = 128
@@ -49,13 +75,20 @@ def _gg_kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref, acc_ref, *, nk: int):
         o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _quant_epilogue(acc, o_ref, os_ref):
+    """Row-wise e4m3 + po2-scale quantization of a (BM, BN=TILE) f32 tile."""
+    from repro.core.fp8 import E4M3, E4M3_MAX
+    amax = jnp.max(jnp.abs(acc), axis=-1, keepdims=True)
+    s = kernel_po2_scale(amax)
+    o_ref[0, ...] = jnp.clip(acc / s, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+    os_ref[0, ...] = s
+
+
 def _gg_quant_kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref, os_ref, acc_ref,
                      *, nk: int):
     """Same as _gg_kernel but the epilogue quantizes the (BM, BN=TILE) output
     tile to e4m3 + a po2 scale column — the 'fused epilogue quantization' that
     keeps Dgrad outputs in FP8 without an explicit cast kernel (§3.2)."""
-    from repro.core.fp8 import E4M3, E4M3_MAX
-
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -71,13 +104,18 @@ def _gg_quant_kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref, os_ref, acc_ref,
 
     @pl.when(k == nk - 1)
     def _done():
-        acc = acc_ref[...]
-        amax = jnp.max(jnp.abs(acc), axis=-1, keepdims=True)
-        safe = jnp.maximum(amax, jnp.float32(1e-38))
-        exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
-        s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
-        o_ref[0, ...] = jnp.clip(acc / s, -E4M3_MAX, E4M3_MAX).astype(E4M3)
-        os_ref[0, ...] = s
+        _quant_epilogue(acc_ref[...], o_ref, os_ref)
+
+
+def _assert_quant_out_tiling():
+    """The quantizing epilogues compute ONE scale per (row, BN-tile) and the
+    wrappers expose it as a row-wise (..., 1, TILE) QTensor whose scale shape
+    is N // TILE.  That is only correct while BN == TILE — if the block
+    shapes ever diverge the scale metadata would be silently wrong, so the
+    mismatch must fail at trace time."""
+    assert BN == TILE, (
+        f"quant-out epilogue requires BN == TILE (got BN={BN}, TILE={TILE}): "
+        "the per-(row, BN-tile) scales are exposed as (1, TILE) row tiles")
 
 
 def grouped_gemm_fp8_pallas(x, sx, w, sw, *, out_dtype=jnp.bfloat16,
@@ -105,6 +143,7 @@ def grouped_gemm_fp8_pallas(x, sx, w, sw, *, out_dtype=jnp.bfloat16,
         )(x, sx, w, sw)
 
     from repro.core.fp8 import E4M3
+    _assert_quant_out_tiling()
     return pl.pallas_call(
         functools.partial(_gg_quant_kernel, nk=nk),
         grid=grid,
@@ -120,3 +159,210 @@ def grouped_gemm_fp8_pallas(x, sx, w, sw, *, out_dtype=jnp.bfloat16,
         scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
         interpret=interpret,
     )(x, sx, w, sw)
+
+
+# ---------------------------------------------------------------------------
+# Masked layout.  masked_m rides scalar prefetch (SMEM) so the per-tile
+# liveness predicate is available before the tile body runs.
+# ---------------------------------------------------------------------------
+def _gg_masked_kernel(mm_ref, x_ref, sx_ref, w_ref, sw_ref, o_ref, acc_ref,
+                      *, nk: int):
+    e = pl.program_id(0)
+    m = pl.program_id(1)
+    k = pl.program_id(3)
+    live = m * BM < mm_ref[e]
+
+    @pl.when(live & (k == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _step():
+        x = x_ref[0].astype(jnp.float32)
+        w = w_ref[0].astype(jnp.float32)
+        partial = jax.lax.dot(x, w, precision=jax.lax.Precision.HIGHEST)
+        acc_ref[...] += partial * (sx_ref[0] * sw_ref[0, 0, 0])
+
+    @pl.when(k == nk - 1)
+    def _done():
+        # dead tiles write zeros — bitwise what the padded kernel produces
+        # for zero-padded rows, so masked == padded on the whole buffer
+        # whenever rows beyond masked_m are zero (the dispatch layout).
+        o_ref[0, ...] = jnp.where(live, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def _gg_masked_quant_kernel(mm_ref, x_ref, sx_ref, w_ref, sw_ref, o_ref,
+                            os_ref, acc_ref, *, nk: int):
+    e = pl.program_id(0)
+    m = pl.program_id(1)
+    k = pl.program_id(3)
+    live = m * BM < mm_ref[e]
+
+    @pl.when(live & (k == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _step():
+        x = x_ref[0].astype(jnp.float32)
+        w = w_ref[0].astype(jnp.float32)
+        partial = jax.lax.dot(x, w, precision=jax.lax.Precision.HIGHEST)
+        acc_ref[...] += partial * (sx_ref[0] * sw_ref[0, 0, 0])
+
+    @pl.when(k == nk - 1)
+    def _done():
+        # dead tiles: acc==0 -> amax==0 -> scale 1.0, payload 0 — the exact
+        # bits the padded quantizing epilogue emits for zero rows.
+        _quant_epilogue(jnp.where(live, acc_ref[...], 0.0), o_ref, os_ref)
+
+
+def _gg_masked_swiglu_quant_kernel(mm_ref, x_ref, sx_ref, w_ref, sw_ref,
+                                   o_ref, os_ref, accg_ref, accu_ref,
+                                   *, nk: int):
+    """Masked grouped GEMM-1 with the SwiGLU + row-wise re-quantize fused
+    into the last K-step: w13 arrives reshaped (E, K, 2, F) so ONE operand
+    block carries both the gate (half 0) and up (half 1) column tiles.  The
+    epilogue rounds both accumulators through bf16 first — bit-identical to
+    the unfused path's materialized bf16 island h — then quantizes
+    silu(gate)*up per (row, TILE)-tile."""
+    from repro.core.fp8 import E4M3, E4M3_MAX
+
+    e = pl.program_id(0)
+    m = pl.program_id(1)
+    k = pl.program_id(3)
+    live = m * BM < mm_ref[e]
+
+    @pl.when(live & (k == 0))
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    @pl.when(live)
+    def _step():
+        x = x_ref[0].astype(jnp.float32)
+        wg = w_ref[0, :, 0, :].astype(jnp.float32)     # (BK, BN) gate cols
+        wu = w_ref[0, :, 1, :].astype(jnp.float32)     # (BK, BN) up cols
+        sx = sx_ref[0]
+        accg_ref[...] += jax.lax.dot(
+            x, wg, precision=jax.lax.Precision.HIGHEST) * (sx * sw_ref[0, 0, 0, 0])
+        accu_ref[...] += jax.lax.dot(
+            x, wu, precision=jax.lax.Precision.HIGHEST) * (sx * sw_ref[0, 0, 1, 0])
+
+    @pl.when(k == nk - 1)
+    def _done():
+        g = jnp.where(live, accg_ref[...], 0.0)
+        u = jnp.where(live, accu_ref[...], 0.0)
+        # bf16 round-trip = the paper's deliberate BF16 island, kept so the
+        # fused epilogue is BITWISE the unfused h -> swiglu+quant kernel pair
+        g = g.astype(jnp.bfloat16).astype(jnp.float32)
+        u = u.astype(jnp.bfloat16).astype(jnp.float32)
+        y = (g * jax.lax.logistic(g)) * u
+        amax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+        s = kernel_po2_scale(amax)
+        o_ref[0, ...] = jnp.clip(y / s, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+        os_ref[0, ...] = s
+
+
+def _masked_specs(extra=0):
+    """in_specs shared by the masked kernels (index maps see the prefetched
+    scalar ref as a trailing arg)."""
+    return [
+        pl.BlockSpec((1, BM, BK), lambda e, m, n, k, mm: (e, m, k)),
+        pl.BlockSpec((1, BM, 1), lambda e, m, n, k, mm: (e, m, k)),
+    ]
+
+
+def masked_grouped_gemm_fp8_pallas(x, sx, w, sw, masked_m, *,
+                                   out_dtype=jnp.bfloat16,
+                                   quant_out: bool = False,
+                                   interpret: bool = True):
+    """Masked grouped GEMM: tiles with m*BM >= masked_m[e] are compute
+    no-ops (zeros written in the epilogue)."""
+    E, C, K = x.shape
+    _, _, N = w.shape
+    assert C % BM == 0 and N % BN == 0 and K % BK == 0, (C, K, N)
+    assert masked_m.shape == (E,) and masked_m.dtype == jnp.int32, masked_m
+    nk = K // BK
+    grid = (E, C // BM, N // BN, nk)
+    in_specs = _masked_specs() + [
+        pl.BlockSpec((1, BK, BN), lambda e, m, n, k, mm: (e, k, n)),
+        pl.BlockSpec((1, 1, 1), lambda e, m, n, k, mm: (e, k, n)),
+    ]
+    if not quant_out:
+        gs = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, BM, BN),
+                                   lambda e, m, n, k, mm: (e, m, n)),
+            scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)])
+        return pl.pallas_call(
+            functools.partial(_gg_masked_kernel, nk=nk),
+            grid_spec=gs,
+            out_shape=jax.ShapeDtypeStruct((E, C, N), out_dtype),
+            interpret=interpret,
+        )(masked_m, x, sx, w, sw)
+
+    from repro.core.fp8 import E4M3
+    _assert_quant_out_tiling()
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, BM, BN), lambda e, m, n, k, mm: (e, m, n)),
+            pl.BlockSpec((1, BM, 1), lambda e, m, n, k, mm: (e, m, n)),
+        ),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_gg_masked_quant_kernel, nk=nk),
+        grid_spec=gs,
+        out_shape=(
+            jax.ShapeDtypeStruct((E, C, N), E4M3),
+            jax.ShapeDtypeStruct((E, C, N // BN), jnp.float32),
+        ),
+        interpret=interpret,
+    )(masked_m, x, sx, w, sw)
+
+
+def masked_grouped_gemm_swiglu_quant_pallas(x, sx, w13, sw13, masked_m, *,
+                                            interpret: bool = True):
+    """Masked grouped GEMM-1 with fused SwiGLU + e4m3 re-quantize epilogue.
+
+    x    : (E, C, K) e4m3, row-wise scales sx (E, C, K/TILE)
+    w13  : (E, K, 2F) e4m3 [gate | up], block scales sw13 (E, K/T, 2F/T)
+    out  : (data (E, C, F) e4m3, scale (E, C, F/TILE) f32)
+
+    The [gate | up] halves are exposed to the kernel through a zero-copy
+    (E, K, 2, F) reshape, so ONE HBM operand (one BlockSpec) feeds both
+    accumulators — no duplicate operand declaration.
+    """
+    from repro.core.fp8 import E4M3
+
+    E, C, K = x.shape
+    twoF = w13.shape[-1]
+    F = twoF // 2
+    assert C % BM == 0 and F % BN == 0 and K % BK == 0, (C, K, F)
+    assert masked_m.shape == (E,) and masked_m.dtype == jnp.int32, masked_m
+    _assert_quant_out_tiling()
+    nk = K // BK
+    w4 = w13.reshape(E, K, 2, F)
+    sw4 = sw13.reshape(E, K // TILE, 2, F // TILE)
+    grid = (E, C // BM, F // BN, nk)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid,
+        in_specs=_masked_specs() + [
+            pl.BlockSpec((1, BK, 2, BN), lambda e, m, n, k, mm: (e, k, 0, n)),
+            pl.BlockSpec((1, 1, 2, 1), lambda e, m, n, k, mm: (e, k, 0, n)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, BM, BN), lambda e, m, n, k, mm: (e, m, n)),
+            pl.BlockSpec((1, BM, 1), lambda e, m, n, k, mm: (e, m, n)),
+        ),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32),
+                        pltpu.VMEM((BM, BN), jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_gg_masked_swiglu_quant_kernel, nk=nk),
+        grid_spec=gs,
+        out_shape=(
+            jax.ShapeDtypeStruct((E, C, F), E4M3),
+            jax.ShapeDtypeStruct((E, C, F // TILE), jnp.float32),
+        ),
+        interpret=interpret,
+    )(masked_m, x, sx, w4, sw4)

@@ -9,6 +9,15 @@ axis of both operands:
 This is exactly the shape the scaling-aware direct transpose produces: Wgrad
 consumes T(activations) and T(grad) — both row-tiled over the token axis —
 with no dequantize/requantize anywhere (paper §3.1/§3.2).
+
+The MASKED variant takes the per-expert live-token count vector ``masked_m``
+(the same counts the masked forward GEMMs use): here the token axis is the
+CONTRACTION axis, so K-steps with ``k * BK >= masked_m[e]`` are skipped —
+their padded-token columns are all zero and contribute nothing, which makes
+the skip bitwise-invisible (x + 0.0 == x in f32 for finite x) while saving
+the full MXU visit.  Partially-live K-tiles are computed whole; callers must
+zero-pad dead token columns (the direct transpose of the zero-padded
+dispatch layout guarantees this).
 """
 from __future__ import annotations
 
@@ -69,3 +78,59 @@ def grouped_gemm_nt_fp8_pallas(a, sa, b, sb, *, out_dtype=jnp.float32,
         scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
         interpret=interpret,
     )(a, sa, b, sb)
+
+
+# ---------------------------------------------------------------------------
+# Masked layout: skip contraction steps over dead token tiles.
+# ---------------------------------------------------------------------------
+def _gg_nt_masked_kernel(mm_ref, a_ref, sa_ref, b_ref, sb_ref, o_ref, acc_ref,
+                         *, nk: int):
+    e = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k * BK < mm_ref[e])
+    def _step():
+        a = a_ref[0].astype(jnp.float32)               # (BM, BK)
+        b = b_ref[0].astype(jnp.float32)               # (BN, BK)
+        partial = jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST)
+        acc_ref[...] += partial * (sa_ref[0] * sb_ref[0].T)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def masked_grouped_gemm_nt_fp8_pallas(a, sa, b, sb, masked_m, *,
+                                      out_dtype=jnp.float32,
+                                      interpret: bool = True):
+    """Masked NT grouped GEMM: the token (contraction) axis is masked —
+    K-steps beyond expert e's live count contribute nothing and are skipped.
+    Bitwise-equal to the padded kernel when dead token columns are zero."""
+    E, M, C = a.shape
+    _, N, _ = b.shape
+    assert M % BM == 0 and N % BN == 0 and C % BK == 0, (M, N, C)
+    assert masked_m.shape == (E,) and masked_m.dtype == jnp.int32, masked_m
+    nk = C // BK
+    grid = (E, M // BM, N // BN, nk)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BM, BK), lambda e, m, n, k, mm: (e, m, k)),
+            pl.BlockSpec((1, BM, 1), lambda e, m, n, k, mm: (e, m, k)),
+            pl.BlockSpec((1, BN, BK), lambda e, m, n, k, mm: (e, n, k)),
+            pl.BlockSpec((1, BN, 1), lambda e, m, n, k, mm: (e, n, k)),
+        ],
+        out_specs=pl.BlockSpec((1, BM, BN), lambda e, m, n, k, mm: (e, m, n)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_gg_nt_masked_kernel, nk=nk),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
+        interpret=interpret,
+    )(masked_m, a, sa, b, sb)

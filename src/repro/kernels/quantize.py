@@ -16,12 +16,28 @@ from repro.core.fp8 import E4M3, E4M3_MAX, TILE
 ROWS = 128  # token rows per block
 
 
+def kernel_po2_scale(amax):
+    """Exact po2 scale from an f32 amax — the in-kernel twin of
+    ``core.fp8.po2_scale``.
+
+    XLA's f32 ``exp2`` is not correctly rounded for |exp| >= 13, so the
+    original ``jnp.exp2(exp)`` epilogues could emit scales that are NOT exact
+    powers of two at large/small amax — silently breaking the scaling-aware
+    transpose contract (the same latent bug ``po2_scale`` fixed with ldexp).
+    Here the scale is BIT-CONSTRUCTED from the integer exponent (exact for
+    exp in [-126, 126], i.e. every clamped value), which also lowers to plain
+    integer VPU ops on TPU."""
+    safe = jnp.maximum(amax, jnp.float32(1e-38))
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+    bits = (exp.astype(jnp.int32) + 127) << 23
+    s = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return jnp.where(amax > 0, s, jnp.float32(1.0))
+
+
 def _quantize_kernel(x_ref, data_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)                     # (ROWS, TILE)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)     # (ROWS, 1)
-    safe = jnp.maximum(amax, jnp.float32(1e-38))
-    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
-    s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+    s = kernel_po2_scale(amax)
     y = jnp.clip(x / s, -E4M3_MAX, E4M3_MAX)
     data_ref[...] = y.astype(E4M3)
     scale_ref[...] = s

@@ -7,14 +7,24 @@ import jax.numpy as jnp
 from repro.core.fp8 import BLOCK, E4M3, E4M3_MAX, TILE
 
 
+def po2_scale_ref(amax):
+    """Exact po2 scale from amax — mirrors kernels/quantize.kernel_po2_scale.
+
+    Uses ldexp of the integer exponent instead of f32 ``exp2`` (which XLA does
+    not correctly round for |exp| >= 13), so the oracle emits bit-identical
+    scales to the bit-constructing kernels."""
+    safe = jnp.maximum(amax, jnp.float32(1e-38))
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
+    s = jnp.ldexp(jnp.float32(1.0), exp.astype(jnp.int32)).astype(jnp.float32)
+    return jnp.where(amax > 0, s, jnp.float32(1.0))
+
+
 def quantize_rowwise_ref(x: jax.Array):
     """Oracle for kernels/quantize.py."""
     M, K = x.shape
     xf = x.astype(jnp.float32).reshape(M, K // TILE, TILE)
     amax = jnp.max(jnp.abs(xf), axis=-1)
-    safe = jnp.maximum(amax, jnp.float32(1e-38))
-    exp = jnp.clip(jnp.ceil(jnp.log2(safe / E4M3_MAX)), -126.0, 126.0)
-    s = jnp.where(amax > 0, jnp.exp2(exp), jnp.float32(1.0))
+    s = po2_scale_ref(amax)
     y = jnp.clip(xf / s[..., None], -E4M3_MAX, E4M3_MAX).astype(E4M3)
     return y.reshape(M, K), s
 
@@ -87,6 +97,83 @@ def grouped_gemm_fp8_quant_out_ref(x, sx, w, sw):
     flat = out.reshape(E * C, N)
     data, scale = quantize_rowwise_ref(flat)
     return data.reshape(E, C, N), scale.reshape(E, C, N // TILE)
+
+
+# ---------------------------------------------------------------------------
+# Masked grouped-GEMM oracles (tile-granular masking, BM/BK = TILE = 128).
+#
+# Masking is TILE-granular, exactly like the kernels: a 128-row M-tile is
+# live iff its first row index is < masked_m[e].  Rows in dead tiles come out
+# as hard zeros (scale 1.0 for quantized outputs) regardless of input
+# content; rows in a partially-live tile are computed whole.
+# ---------------------------------------------------------------------------
+def _tile_live_rows(masked_m, C):
+    """(E,) counts -> (E, C) bool: row r live iff its tile start < count."""
+    starts = (jnp.arange(C) // TILE) * TILE                       # (C,)
+    return starts[None, :] < masked_m[:, None]
+
+
+def masked_grouped_gemm_fp8_ref(x, sx, w, sw, masked_m,
+                                out_dtype=jnp.bfloat16):
+    """Oracle for the masked grouped GEMM (NN form)."""
+    out = grouped_gemm_fp8_ref(x, sx, w, sw, out_dtype=jnp.float32)
+    live = _tile_live_rows(masked_m, out.shape[1])
+    return jnp.where(live[..., None], out, 0.0).astype(out_dtype)
+
+
+def masked_grouped_gemm_fp8_quant_out_ref(x, sx, w, sw, masked_m):
+    """Oracle for the masked quantizing-epilogue grouped GEMM: dead tiles
+    emit payload 0 and scale 1.0 (what quantizing an all-zero row yields)."""
+    out = grouped_gemm_fp8_ref(x, sx, w, sw, out_dtype=jnp.float32)
+    E, C, N = out.shape
+    live = _tile_live_rows(masked_m, C)
+    out = jnp.where(live[..., None], out, 0.0)
+    data, scale = quantize_rowwise_ref(out.reshape(E * C, N))
+    return data.reshape(E, C, N), scale.reshape(E, C, N // TILE)
+
+
+def masked_grouped_gemm_nt_fp8_ref(a, sa, b, sb, masked_m,
+                                   out_dtype=jnp.float32):
+    """Oracle for the masked NT grouped GEMM: contraction tiles beyond the
+    live-token count are dropped (not merely zero-multiplied)."""
+    E, M, C = a.shape
+    N = b.shape[1]
+    nk = C // TILE
+    af = a.astype(jnp.float32).reshape(E, M, nk, TILE)
+    bf = b.astype(jnp.float32).reshape(E, N, nk, TILE)
+    acc = jnp.zeros((E, M, N), jnp.float32)
+    for k in range(nk):
+        partial = jnp.einsum("emt,ent->emn", af[:, :, k], bf[:, :, k],
+                             precision=jax.lax.Precision.HIGHEST)
+        partial = partial * sa[:, :, k][..., None] * sb[:, :, k][:, None, :]
+        klive = (k * TILE < masked_m)[:, None, None]
+        acc = acc + jnp.where(klive, partial, 0.0)
+    return acc.astype(out_dtype)
+
+
+def masked_grouped_gemm_swiglu_quant_ref(x, sx, w13, sw13, masked_m):
+    """Oracle for the masked GEMM-1 with fused SwiGLU+quant epilogue.
+
+    w13: (E, K, 2F) = [gate | up] halves.  Each half accumulates k-major in
+    f32 (same order as the kernel), rounds through bf16 (matching the unfused
+    pipeline's h bf16 island), then SwiGLU + row-wise e4m3 quantization.
+    Dead tiles zero before the activation, so they quantize to payload 0 /
+    scale 1.0 — the padded-pipeline bits for zero rows."""
+    E, K, twoF = w13.shape
+    F = twoF // 2
+    w4 = w13.reshape(E, K, 2, F)
+    sw4 = sw13.reshape(E, K // TILE, 2, F // TILE)
+    g = grouped_gemm_fp8_ref(x, sx, w4[:, :, 0, :], sw4[:, :, 0, :],
+                             out_dtype=jnp.float32)
+    u = grouped_gemm_fp8_ref(x, sx, w4[:, :, 1, :], sw4[:, :, 1, :],
+                             out_dtype=jnp.float32)
+    C = g.shape[1]
+    live = _tile_live_rows(masked_m, C)[..., None]
+    g = jnp.where(live, g, 0.0).astype(jnp.bfloat16).astype(jnp.float32)
+    u = jnp.where(live, u, 0.0).astype(jnp.bfloat16).astype(jnp.float32)
+    y = (g * jax.lax.logistic(g)) * u
+    data, scale = quantize_rowwise_ref(y.reshape(E * C, F))
+    return data.reshape(E, C, F), scale.reshape(E, C, F // TILE)
 
 
 def fused_permute_pad_ref(x, s, row_map, n_out):

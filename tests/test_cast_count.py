@@ -77,6 +77,48 @@ def test_moe_block_cast_count(name):
     assert led.activation_casts() == EXPECTED_MOE[name], led.summary()
 
 
+def test_masked_fused_epilogue_keeps_two_casts():
+    """Masked expert kernels + the fused SwiGLU-in-GEMM-1 epilogue must not
+    change the Fig.-2 accounting: still 2 explicit casts (entry + bwd
+    island), swiglu_quant stays FUSED kind, and the tag set is identical to
+    the unfused fp8_flow FFN."""
+    def run(recipe, masked_m):
+        r = np.random.default_rng(0)
+        E, C, K, F = 2, 128, 256, 128
+        x = jnp.asarray(r.normal(size=(E, C, K)).astype(np.float32)
+                        ).astype(jnp.bfloat16)
+        if masked_m is not None:   # dead dispatch slots carry zeros
+            live = jnp.asarray(np.arange(C)[None, :]
+                               < np.asarray(masked_m)[:, None])
+            x = jnp.where(live[..., None], x, 0)
+        w13 = jnp.asarray(r.normal(size=(E, K, 2 * F)).astype(np.float32)
+                          * 0.05)
+        w2 = jnp.asarray(r.normal(size=(E, F, K)).astype(np.float32) * 0.05)
+
+        def L(x, w13, w2):
+            xi = quantize_entry(recipe, x)
+            y = expert_ffn(recipe, "swiglu", (), (), xi, w13, w2, masked_m)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+
+        with casts.ledger() as led:
+            jax.grad(L, argnums=(0, 1, 2))(x, w13, w2)
+        return led
+
+    base = run(get_recipe("fp8_flow", use_pallas=True), None)
+    fused = run(get_recipe("fp8_flow", use_pallas=True, masked_experts=True,
+                           swiglu_epilogue=True),
+                jnp.asarray([64, 128], jnp.int32))
+    assert fused.activation_casts() == 2, fused.summary()
+    assert fused.activation_casts() == base.activation_casts()
+    # same tag set; swiglu_quant present in BOTH, always fused kind
+    def tags(led):
+        return {(e.kind, e.tag) for e in led.events
+                if not e.tag.startswith("q_w")}
+    assert tags(fused) == tags(base), (tags(fused), tags(base))
+    assert ("fused_quantize", "swiglu_quant") in tags(fused)
+    assert not [e for e in fused.events if e.kind == "dequantize"]
+
+
 def test_flow_has_zero_dequantize_ops():
     """fp8_flow's explicit casts are both QUANTIZE ops — no dequantize ever
     materializes (the casting-free property)."""
