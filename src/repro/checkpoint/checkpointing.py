@@ -24,9 +24,45 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed an integrity check on restore: torn/unreadable
+    shard bytes, a per-leaf shape/dtype mismatch against the MANIFEST, or a
+    fingerprint mismatch.  Callers (train/loop.py's rollback ladder) catch
+    this and fall back to an OLDER complete step instead of silently
+    loading corrupt state into the optimizer."""
+
+
+class AsyncSaveHandle:
+    """Handle for an async save: join() re-raises any exception the writer
+    thread hit, so a failed background write cannot masquerade as a
+    durable checkpoint."""
+
+    def __init__(self, fn):
+        self._exc = None
+
+        def _run():
+            try:
+                fn()
+            except BaseException as e:   # noqa: BLE001 — re-raised on join
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self):
+        self._thread.join()
+        if self._exc is not None:
+            raise self._exc
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def _fingerprint(arrays) -> float:
+    return float(sum(float(np.sum(np.abs(a.astype(np.float64))))
+                     for a in arrays if a.dtype.kind == "f"))
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, async_: bool = False,
@@ -49,9 +85,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, async_: bool = False,
             "treedef": str(treedef),
             "shapes": [list(np.shape(a)) for a in arrays.values()],
             "dtypes": [str(a.dtype) for a in arrays.values()],
-            "fingerprint": float(sum(
-                float(np.sum(np.abs(a.astype(np.float64))))
-                for a in arrays.values() if a.dtype.kind == "f")),
+            "fingerprint": _fingerprint(arrays.values()),
         }
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(manifest, f)
@@ -63,9 +97,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, async_: bool = False,
         _gc(ckpt_dir, max_keep)
 
     if async_:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        return t
+        return AsyncSaveHandle(_write)
     _write()
     return None
 
@@ -103,22 +135,50 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step}")
+    # an explicit step must ALSO be committed — a torn directory that never
+    # got its .COMPLETE marker is not restorable just because it was named
+    if not os.path.exists(os.path.join(path, ".COMPLETE")):
+        raise CheckpointCorruptError(
+            f"{path}: no .COMPLETE marker (torn or in-flight save)")
     with open(os.path.join(path, "MANIFEST.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "shard_0.npz"))
     leaves_like, treedef = _flatten(tree_like)
     assert manifest["n_leaves"] == len(leaves_like), "tree structure changed"
     import ml_dtypes  # noqa: F401 — registers bf16/fp8 numpy dtypes
+    # integrity pass BEFORE any device_put: every leaf's raw bytes must
+    # decode against the manifest's shape/dtype, and the float fingerprint
+    # must reproduce bit-for-bit (same bytes, same summation order)
+    arrays = []
+    try:
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        for i in range(len(leaves_like)):
+            dtype = np.dtype(manifest["dtypes"][i])
+            shape = tuple(manifest["shapes"][i])
+            raw = data[f"leaf_{i}"]
+            if raw.size * raw.itemsize != \
+                    int(np.prod(shape, dtype=np.int64)) * dtype.itemsize:
+                raise CheckpointCorruptError(
+                    f"{path}: leaf_{i} holds {raw.size * raw.itemsize} "
+                    f"bytes, manifest says {shape} {dtype}")
+            arrays.append(raw.view(dtype).reshape(shape))
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:   # torn zip, bad CRC, missing member, ...
+        raise CheckpointCorruptError(
+            f"{path}: unreadable shard bytes ({type(e).__name__}: {e})"
+        ) from e
+    fp, want = _fingerprint(arrays), manifest["fingerprint"]
+    if fp != want and not (np.isnan(fp) and np.isnan(want)):
+        raise CheckpointCorruptError(
+            f"{path}: fingerprint mismatch (manifest {want!r}, "
+            f"recomputed {fp!r}) — shard bytes were altered after commit")
     new_leaves = []
     # None leaves mean "leave placement alone" — keep them as leaves so a
     # partially-specified shardings tree stays aligned with the state tree
     shard_leaves = jax.tree.flatten(
         shardings, is_leaf=lambda x: x is None)[0] \
         if shardings is not None else [None] * len(leaves_like)
-    for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
-        dtype = np.dtype(manifest["dtypes"][i])
-        shape = tuple(manifest["shapes"][i])
-        arr = data[f"leaf_{i}"].view(dtype).reshape(shape)
+    for arr, shd in zip(arrays, shard_leaves):
         if shd is not None:
             new_leaves.append(jax.device_put(arr, shd))
         else:

@@ -38,7 +38,7 @@ from repro.core import casts
 from repro.core.fp8 import TILE
 from repro.core.quant import (QTensor, _dequantize_nocount, dequantize,
                               quantize_blockwise, quantize_rowwise,
-                              tag_qtensor, tag_saveable)
+                              record_entry_stats, tag_qtensor, tag_saveable)
 from repro.core.recipes import Recipe
 from repro.core.transpose import transpose_direct, transpose_naive
 
@@ -517,5 +517,6 @@ def dense_mlp(recipe: Recipe, act: str, x, w13, w2):
                           w13_3, w2_3)[0][:T, :D]
     # fp8_flow: quantize once at entry, FP8-native pathway end to end
     qx = quantize_entry(recipe, x3)
+    record_entry_stats("q_entry", x3, qx)
     y = expert_ffn(recipe, act, (), (), qx, w13_3, w2_3)
     return y[0][:T, :D]

@@ -35,6 +35,7 @@ from repro.core.linear import (_q_row, _quant_weights, dequantize_exit,
                                expert_ffn, ffn_bwd_fp8_core, ffn_fwd_fp8_core,
                                quantize_entry)
 from repro.core.quant import (QTensor, _dequantize_nocount, quantize_rowwise,
+                              record_entry_stats,
                               tag_saveable)
 from repro.core.recipes import Recipe
 
@@ -287,6 +288,7 @@ def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     # ---- dispatch ----------------------------------------------------------
     if recipe.name == "fp8_flow":
         q_send = dispatch_quantize(recipe, x, row_map_send, T)
+        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
         d = _a2a(q_send.data, cfg.ep_axis)
         s = _a2a(q_send.scale, cfg.ep_axis)
         q_recv = QTensor(d, s, q_send.tile)
@@ -373,6 +375,7 @@ def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
 
     if recipe.name == "fp8_flow":
         q_exp = dispatch_quantize(recipe, x, tok_of_slot, T)
+        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
         ffn_in = QTensor(q_exp.data.reshape(E, C_exp, D),
                          q_exp.scale.reshape(E, C_exp, D // TILE), (1, 1, TILE))
     else:
@@ -660,6 +663,7 @@ def moe_block_overlapped(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
     n = DispatchPlan(n_chunks=n_chunks, min_chunk_tokens=1).chunks_for(T)
     p, ids, aux = router_topk(x, w_router, cfg.top_k)
     if recipe.name == "fp8_flow":
+        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
         y, drop = _overlap_core_flow(recipe, cfg, n, x, p, ids, w13, w2)
     else:
         y, drop = _overlap_chunks_autodiff(recipe, cfg, n, x, p, ids, w13, w2)

@@ -28,9 +28,11 @@ Every quantize/dequantize call is recorded on the active CastLedger (see
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +111,124 @@ def tag_qtensor(q: "QTensor", name: str) -> "QTensor":
     u8 = tag_saveable(u8, f"{name}_data")
     data = jax.lax.bitcast_convert_type(u8, q.data.dtype)
     return QTensor(data, tag_saveable(q.scale, f"{name}_scale"), q.tile)
+
+
+# ---------------------------------------------------------------------------
+# FP8 health stats for the numerics guardrails (train/guards.py).
+#
+# When a collector is armed (train_step traces under `collect_stats()`),
+# the instrumented sites record a (2,) f32 vector [saturation fraction,
+# underflow-flush fraction] of their tensor.  The recorded values are
+# TRACERS, and recording must happen in a trace region that can hand them
+# back out: any enclosing lax.scan body / jax.checkpoint block / shard_map
+# body drains its own records into an explicit output before returning
+# (`drain_stats` + `reinject_stats` at the outer level) — models/lm.py
+# threads them through every stack driver and both MLP/MoE shard_maps.
+#
+# Crucially, recording must sit OUTSIDE any custom_vjp: fwd/bwd rules are
+# traced to their own jaxprs, so a record made inside one is a foreign
+# tracer by the time the surrounding region drains (UnexpectedTracerError).
+# quantize() itself (which runs inside the entry/FFN custom_vjps) therefore
+# never records; the entry sites record via `record_entry_stats` at their
+# CALL sites, and the gradient wire records inside grad_comm's
+# quantize_bucket (plain code in the train-step body).  The backward-island
+# quantizes (q_bwd_*) are covered by the grad-norm/nonfinite guards one
+# reduction later instead.  With no collector armed this machinery adds
+# ZERO ops — the default jaxpr is bitwise-unchanged.
+# ---------------------------------------------------------------------------
+STATS_LEN = 2                      # [sat_frac, flush_frac], max-merged
+STATS_TAGS = frozenset({"q_entry", "dp_wire"})
+
+_QSTATS: contextvars.ContextVar[Optional["QuantStatsCollector"]] = \
+    contextvars.ContextVar("quant_stats", default=None)
+
+
+class QuantStatsCollector:
+    def __init__(self):
+        self.vals: List[jax.Array] = []
+
+
+def stats_armed() -> bool:
+    return _QSTATS.get() is not None
+
+
+def zero_stats() -> jax.Array:
+    return jnp.zeros((STATS_LEN,), jnp.float32)
+
+
+def record_stat_pair(sat_frac, flush_frac) -> None:
+    col = _QSTATS.get()
+    if col is not None:
+        col.vals.append(jnp.stack([jnp.asarray(sat_frac, jnp.float32),
+                                   jnp.asarray(flush_frac, jnp.float32)]))
+
+
+def drain_stats() -> jax.Array:
+    """Max-merge and CLEAR the collected stats (call inside the trace
+    region whose records you are extracting)."""
+    col = _QSTATS.get()
+    if col is None or not col.vals:
+        return zero_stats()
+    out = col.vals[0]
+    for v in col.vals[1:]:
+        out = jnp.maximum(out, v)
+    col.vals.clear()
+    return out
+
+
+def reinject_stats(vec) -> None:
+    """Re-record a drained stats vector at the CURRENT trace level (after
+    a scan / checkpoint block returned it as an explicit output)."""
+    col = _QSTATS.get()
+    if col is not None:
+        col.vals.append(jnp.asarray(vec, jnp.float32))
+
+
+@contextlib.contextmanager
+def collect_stats():
+    col = QuantStatsCollector()
+    tok = _QSTATS.set(col)
+    try:
+        yield col
+    finally:
+        _QSTATS.reset(tok)
+
+
+def _maybe_record_stats(tag: str, xf, data, fmax: float) -> None:
+    """sat = pre-clip overflow fraction; flush = nonzero inputs whose fp8
+    encoding flushed to zero (below the subnormal floor).  `xf` is the
+    already-scaled tensor, `data` its fp8 payload.  Callers must sit outside
+    any custom_vjp (see the stats block comment)."""
+    if _QSTATS.get() is None or tag not in STATS_TAGS:
+        return
+    xa = jnp.abs(xf.astype(jnp.float32))
+    sat = jnp.mean((xa > fmax).astype(jnp.float32))
+    flush = jnp.mean(((data.astype(jnp.float32) == 0) & (xa > 0)
+                      ).astype(jnp.float32))
+    record_stat_pair(sat, flush)
+
+
+def record_entry_stats(tag: str, x, q: Optional["QTensor"] = None,
+                       scale_mode: str = "po2", fmt=E4M3) -> None:
+    """Record sat/flush for a forward entry quantize from its CALL SITE
+    (outside the custom_vjp whose fwd rule performed the quantization).
+
+    With `q` LAYOUT-ALIGNED to x (quantize_entry's return), its payload and
+    scales are reused; without (the MoE dispatch returns a permuted/padded
+    QTensor), the row-wise scale + payload are recomputed — one amax +
+    cast pass, and only while a collector is armed."""
+    if _QSTATS.get() is None or tag not in STATS_TAGS:
+        return
+    fmax = FMT_MAX[fmt]
+    tile = row_tile(x.ndim)
+    if q is None:
+        scale = compute_scale(x, tile, fmt, scale_mode)
+    else:
+        scale = q.scale
+    xf = _tiled_op(x.astype(jnp.float32), scale, tile, lambda a, b: a / b)
+    data = q.data if q is not None else \
+        jnp.clip(xf, -fmax, fmax).astype(fmt)
+    _maybe_record_stats(tag, xf, data, fmax)
 
 
 def row_tile(ndim: int) -> Tuple[int, ...]:
@@ -191,6 +311,8 @@ def quantize(x: jax.Array, tile, fmt=E4M3, scale_mode: str = "po2",
     kind='quantize' is an explicit cast; kind='fused_quantize' marks a
     quantization folded into a surrounding kernel (not counted by Fig. 2)."""
     casts.record(kind, tag, x.size)
+    from repro.runtime import fault_injection
+    x = fault_injection.apply("activation", tag, x)
     scale = compute_scale(x, tile, fmt, scale_mode)
     fmax = FMT_MAX[fmt]
     if x.dtype == jnp.bfloat16 and scale_mode == "po2":

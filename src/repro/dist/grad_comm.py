@@ -58,15 +58,29 @@ def quantize_bucket(flat: jax.Array, axis_name):
     casts.record("fused_quantize", "dp_wire", flat.size)
     scale = scale_sync.agreed_po2_scale(flat, axis_name)
     payload = jnp.clip(flat / scale, -E4M3_MAX, E4M3_MAX).astype(E4M3)
-    return payload, scale_sync.scale_to_exp_i8(scale)
+    from repro.core import quant
+    if quant.stats_armed():
+        quant._maybe_record_stats("dp_wire", flat / scale, payload, E4M3_MAX)
+    from repro.runtime import fault_injection
+    payload = fault_injection.apply("wire_payload", "dp_wire", payload)
+    exp = fault_injection.apply("wire_exp", "dp_wire",
+                                scale_sync.scale_to_exp_i8(scale))
+    return payload, exp
 
 
 def reduce_scatter_bucket(flat: jax.Array, axis_name, n_shards: int,
-                          wire: str) -> jax.Array:
+                          wire: str, guard=None):
     """(rows, TILE) local f32 grads -> (rows/n_shards, TILE) owned f32 MEAN.
 
     rows must divide n_shards (plan.py pads to shard_multiple).  With one
-    shard the wire is exercised end-to-end minus the collective."""
+    shard the wire is exercised end-to-end minus the collective.
+
+    guard (a train/guards.py GuardPlan) arms the WIRE GUARD: the received
+    message's exponents/payload are checked before the dequant-sum
+    (scale_sync.wire_anomaly, replica-uniform) and a poisoned bucket drops
+    to the bf16-psum fallback computed from the LOCAL pre-quantize f32
+    gradient — the step's update survives the fault in-step.  Returns
+    (owned, bad) instead of plain `owned` when guarded."""
     rows = flat.shape[0]
     assert rows % n_shards == 0, (rows, n_shards)
 
@@ -78,6 +92,29 @@ def reduce_scatter_bucket(flat: jax.Array, axis_name, n_shards: int,
             msg = jax.lax.all_to_all(msg, axis_name, split_axis=0,
                                      concat_axis=0, tiled=False)
         pay, exps = unpack_bucket(msg)
+        if guard is not None:
+            bad = scale_sync.wire_anomaly(exps, pay, axis_name,
+                                          guard.wire_exp_limit)
+
+            def fp8_sum(_):
+                parts = pay.astype(jnp.float32) * \
+                    scale_sync.exp_i8_to_scale(exps)
+                return jnp.sum(parts, axis=0)
+
+            def bf16_fallback(_):
+                # existing bf16-psum wire, sliced to the owned row block
+                g = flat.astype(jnp.bfloat16)
+                rows_l = rows // n_shards
+                if axis_name is not None and n_shards > 1:
+                    g = jax.lax.psum(g, axis_name)
+                    idx = jax.lax.axis_index(axis_name)
+                else:
+                    idx = 0
+                return jax.lax.dynamic_slice_in_dim(
+                    g.astype(jnp.float32), idx * rows_l, rows_l, 0)
+
+            owned = jax.lax.cond(bad, bf16_fallback, fp8_sum, None)
+            return owned / n_shards, bad
         parts = pay.astype(jnp.float32) * scale_sync.exp_i8_to_scale(exps)
         owned = jnp.sum(parts, axis=0)
     else:
@@ -87,6 +124,8 @@ def reduce_scatter_bucket(flat: jax.Array, axis_name, n_shards: int,
             msg = jax.lax.all_to_all(msg, axis_name, split_axis=0,
                                      concat_axis=0, tiled=False)
         owned = jnp.sum(msg.astype(jnp.float32), axis=0)
+    if guard is not None:
+        return owned / n_shards, jnp.bool_(False)
     return owned / n_shards
 
 

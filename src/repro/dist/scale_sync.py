@@ -50,3 +50,19 @@ def exp_i8_to_scale(exp: jax.Array) -> jax.Array:
     not correctly rounded for |e| >= 13, which would silently break the
     exact-po2 contract the whole wire rests on."""
     return jnp.ldexp(jnp.float32(1.0), exp.astype(jnp.int32))
+
+
+def wire_anomaly(exp: jax.Array, payload: jax.Array, axis_name,
+                 exp_limit: int) -> jax.Array:
+    """Wire guard predicate, evaluated on the RECEIVED message before the
+    dequant-sum: True when any unpacked po2 exponent is absurd (|e| beyond
+    `exp_limit` — healthy e4m3 gradient tiles keep agreed scales within a
+    few tens of octaves of 1.0) or any e4m3 payload lane decodes nonfinite
+    (e4m3fn's only nonfinite encoding is NaN, 0x7f/0xff).  pmax makes the
+    scalar replica-uniform so it can steer a lax.cond under shard_map."""
+    bad_exp = jnp.any(jnp.abs(exp.astype(jnp.int32)) > exp_limit)
+    bad_pay = jnp.any(jnp.isnan(payload.astype(jnp.float32)))
+    bad = jnp.logical_or(bad_exp, bad_pay)
+    if axis_name is not None:
+        bad = jax.lax.pmax(bad.astype(jnp.int32), axis_name) > 0
+    return bad

@@ -30,6 +30,11 @@ miscompiling.
 (train/memory.py MemoryPlan): 'fp8_resident' keeps only the QTensor stage
 outputs across the forward/backward boundary (the paper's memory claim),
 'pair' checkpoints two-layer blocks (compile-time lever at depth).
+
+--guard arms the numerics guardrails (train/guards.py): train_step emits an
+in-step anomaly bitmask (nonfinite loss/grads, grad-norm spikes vs a
+carried EMA, FP8 saturation/underflow-flush fractions, wire-guard trips)
+and the loop runs the skip -> rollback -> bf16-demote recovery ladder.
 """
 import argparse
 import dataclasses
@@ -46,6 +51,7 @@ from repro.launch.sharding import dist_state_specs, make_plan
 from repro.models.lm import ParallelPlan
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.fault_tolerance import ElasticTrainer
+from repro.train.guards import GuardPlan, GuardPolicy
 from repro.train.loop import run as run_loop
 from repro.train.train_step import init_train_state, make_train_step
 
@@ -81,6 +87,19 @@ def main():
                     help="microbatches per step; with --dist-schedule "
                          "stream the wire runs once, from inside the last "
                          "microbatch's backward")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the numerics guardrails (train/guards.py): "
+                         "in-step anomaly bitmask + skip/rollback/demote "
+                         "recovery ladder with a bf16 fallback step")
+    ap.add_argument("--guard-spike-factor", type=float, default=4.0,
+                    help="grad-norm spike threshold as a multiple of the "
+                         "carried EMA")
+    ap.add_argument("--guard-rollback-after", type=int, default=3,
+                    help="consecutive anomalous steps before restoring the "
+                         "last valid checkpoint")
+    ap.add_argument("--guard-demote-steps", type=int, default=8,
+                    help="length of the bf16 fallback window entered after "
+                         "persistent anomalies")
     args = ap.parse_args()
 
     dist = DistPlan(wire=args.dist_wire, schedule=args.dist_schedule) \
@@ -119,7 +138,10 @@ def main():
 
     recipe = get_recipe(args.recipe)
     opt = AdamWConfig(lr=args.lr)
-    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist)
+    guard = GuardPlan(spike_factor=args.guard_spike_factor) \
+        if args.guard else None
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist,
+                             guard=guard)
     if dist is not None and dist.schedule == "stream":
         # fast clear fallback: if the layout's buckets cannot align to layer
         # boundaries (or the config cannot stream), warn and run post-hoc —
@@ -137,7 +159,24 @@ def main():
     step = jax.jit(make_train_step(cfg, recipe, plan, opt, dist=dist,
                                    grad_accum=args.grad_accum,
                                    total_steps=args.steps,
-                                   warmup_steps=max(args.steps // 10, 1)))
+                                   warmup_steps=max(args.steps // 10, 1),
+                                   guard=guard))
+    policy = fallback = None
+    if guard is not None:
+        policy = GuardPolicy(rollback_after=args.guard_rollback_after,
+                             demote_steps=args.guard_demote_steps)
+        # graceful degradation target: same arch/plan/opt under the bf16
+        # recipe (no quantize sites), still guard-instrumented so the
+        # ladder keeps observing while demoted
+        if recipe.name != "bf16":
+            fallback = jax.jit(make_train_step(
+                cfg, get_recipe("bf16"), plan, opt, dist=dist,
+                grad_accum=args.grad_accum, total_steps=args.steps,
+                warmup_steps=max(args.steps // 10, 1), guard=guard))
+        print(f"[train] guardrails armed: spike_factor="
+              f"{args.guard_spike_factor} rollback_after="
+              f"{args.guard_rollback_after} demote_steps="
+              f"{args.guard_demote_steps}")
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                       global_batch=args.global_batch)
     elastic = ElasticTrainer(n_data_shards=mesh.shape["data"]) \
@@ -151,7 +190,8 @@ def main():
         state, hist = run_loop(step, state, data, n_steps=args.steps,
                                grad_accum=args.grad_accum,
                                ckpt_dir=args.ckpt_dir, elastic=elastic,
-                               restore_shardings=restore_sh)
+                               restore_shardings=restore_sh,
+                               guard_policy=policy, fallback_step=fallback)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
           f"{hist[-1]['loss']:.4f}")
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import quant as quant_stats
 from repro.core.linear import dense_mlp, expert_ffn, quantize_entry
 from repro.core.moe import (DispatchPlan, MoEConfig, moe_block,
                             moe_block_decode, moe_block_decode_overlapped,
@@ -229,10 +230,12 @@ def _mlp_stage(cfg, recipe, plan, p, x):
                       w13.reshape(D, g * F), w2)
         return y.reshape(B, S, D)
 
-    from repro.compat import shard_map
+    from repro.compat import pvary, shard_map
     tp_size = plan.mesh.shape[plan.tp_axis]
     use_tp = plan.mlp_tp and mlp_tp_ok(F, tp_size)
     gather = plan.fsdp_axis
+    armed = quant_stats.stats_armed()
+    all_axes = tuple(plan.mesh.axis_names)
 
     def body(x3, w13_l, w2_l):
         if gather:
@@ -245,7 +248,15 @@ def _mlp_stage(cfg, recipe, plan, p, x):
         # 53 GB/layer of involuntary all-gather on the pod mesh)
         y = _dense_mlp_sharded(recipe, cfg.act, plan, x3.reshape(Bl * Sl, Dl),
                                w13_l.reshape(Dl, gl * Fl), w2_l, tp=use_tp)
-        return y.reshape(Bl, Sl, Dl)
+        y = y.reshape(Bl, Sl, Dl)
+        if armed:
+            # guard stats recorded inside this body are tracers of the
+            # shard_map trace — thread them out per-shard, max-merge outside
+            sv = quant_stats.drain_stats()
+            sv = pvary(sv, tuple(
+                a for a in all_axes if a not in getattr(sv, "vma", all_axes)))
+            return y, sv[None]
+        return y
 
     fs = plan.fsdp_axis
     dp = plan.dp_axes if B % _axes_prod(plan) == 0 else None
@@ -260,9 +271,14 @@ def _mlp_stage(cfg, recipe, plan, p, x):
         tok_spec = P(dp, seq_ax, None)
         w13_spec = P(fs, None, None)
         w2_spec = P(None, fs)
+    out_specs = (tok_spec, P(all_axes, None)) if armed else tok_spec
     sm = shard_map(body, mesh=plan.mesh,
                    in_specs=(tok_spec, w13_spec, w2_spec),
-                   out_specs=tok_spec)
+                   out_specs=out_specs)
+    if armed:
+        y, sv = sm(x, w13, w2)
+        quant_stats.reinject_stats(jnp.max(sv, axis=0))
+        return y
     return sm(x, w13, w2)
 
 
@@ -286,6 +302,7 @@ def _dense_mlp_sharded(recipe, act, plan, xf, w13_l, w2_l, *, tp: bool):
         wg_axes, gx_axes = dp + (plan.tp_axis,), ()
     if recipe.name == "fp8_flow":
         qx = quantize_entry(recipe, x3)
+        quant_stats.record_entry_stats("q_entry", x3, qx)
         y = expert_ffn(recipe, act, wg_axes, gx_axes, qx, w13_l[None],
                        w2_l[None])
     else:
@@ -412,6 +429,8 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
 
     all_axes = tuple(plan.mesh.axis_names)
 
+    armed = quant_stats.stats_armed()
+
     def body3(x3, wr_l, we13_l, we2_l):
         Bl, Sl, Dl = x3.shape
         y, aux = body(x3.reshape(Bl * Sl, Dl), wr_l, we13_l, we2_l)
@@ -420,12 +439,22 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
         from repro.compat import pvary
         aux = pvary(aux, tuple(
             a for a in all_axes if a not in getattr(aux, "vma", all_axes)))
-        return y.reshape(Bl, -1, Dl), aux
+        y = y.reshape(Bl, -1, Dl)
+        if armed:
+            # guard stats recorded inside this body are tracers of the
+            # shard_map trace — thread them out per-shard, max-merge outside
+            sv = quant_stats.drain_stats()
+            sv = pvary(sv, tuple(
+                a for a in all_axes if a not in getattr(sv, "vma", all_axes)))
+            return y, aux, sv[None]
+        return y, aux
 
+    out3 = (P(dp3, out_seq3, None), P(all_axes)) + \
+        ((P(all_axes, None),) if armed else ())
     sm = shard_map(body3, mesh=plan.mesh,
                    in_specs=(P(dp3, seq3, None), P(None, None),
                              we13_spec, we2_spec),
-                   out_specs=(P(dp3, out_seq3, None), P(all_axes)))
+                   out_specs=out3)
 
     # Overlap lever (§dispatch pipeline): with moe_overlap set, the shared
     # expert — which depends only on x, never on the dispatch — is ISSUED
@@ -438,7 +467,11 @@ def _moe_stage(cfg, recipe, plan, p, x, decode=False):
         shared_out = _mlp_stage(cfg, recipe, plan,
                                 {"w13": p["ws13"], "w2": p["ws2"]}, x)
 
-    y, aux = sm(x, wr, we13, we2)
+    if armed:
+        y, aux, sv = sm(x, wr, we13, we2)
+        quant_stats.reinject_stats(jnp.max(sv, axis=0))
+    else:
+        y, aux = sm(x, wr, we13, we2)
     aux = jnp.mean(aux)
 
     if cfg.n_shared_experts:
@@ -547,19 +580,33 @@ def _run_stack(cfg, recipe, plan, stack_params, pattern, n_layers, moe, x,
         glen *= fold
         ng //= fold
 
+    # guard-stats threading (train/guards.py): quantize-site stats recorded
+    # inside the scan body are TRACERS of that body — they must ride the
+    # carry out (drained in-body, max-merged) and be reinjected at this
+    # level.  Unarmed (the default), the carry and jaxpr are unchanged.
+    armed = quant_stats.stats_armed()
+
     def group_body(carry, pslice):
-        xc, aux = carry
+        xc, aux = carry[:2]
         for i in range(glen):
             pi = jax.tree.map(lambda a: a[i], pslice)
             xc, a, _, _, _ = _sub_layer(cfg, recipe, plan, pattern[i], moe,
                                         pi, xc, positions, causal=causal)
             aux = aux + a
+        if armed:
+            return (xc, aux, jnp.maximum(carry[2],
+                                         quant_stats.drain_stats())), None
         return (xc, aux), None
 
     body = mem.wrap(group_body)
     grouped = jax.tree.map(
         lambda a: a.reshape(ng, glen, *a.shape[1:]), stack_params)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), grouped)
+    init = (x, jnp.float32(0.0)) + \
+        ((quant_stats.zero_stats(),) if armed else ())
+    carry, _ = jax.lax.scan(body, init, grouped)
+    x, aux = carry[:2]
+    if armed:
+        quant_stats.reinject_stats(carry[2])
     return x, aux
 
 
@@ -626,6 +673,7 @@ def _run_stack_unrolled(cfg, recipe, plan, stack_params, pattern, n_layers,
     the 'pair' policy — the compile-time lever)."""
     pattern = _pattern_or_fallback(pattern, n_layers)
     mem = MemoryPlan.from_config(cfg)
+    armed = quant_stats.stats_armed()
     aux = jnp.float32(0.0)
     pending = None                  # the two-layer window's deferred scalar
     for blk in mem.layer_blocks(n_layers):
@@ -639,9 +687,15 @@ def _run_stack_unrolled(cfg, recipe, plan, stack_params, pattern, n_layers,
                 xc, a = layer_forward(cfg, recipe, plan, kind, moe, p, xc,
                                       positions, causal=causal)
                 a_blk = a_blk + a
+            if armed:   # guard stats: drained in-block, threaded out
+                return xc, a_blk, quant_stats.drain_stats()
             return xc, a_blk
 
-        x, a = mem.wrap(f)(ps, x)
+        if armed:
+            x, a, sv = mem.wrap(f)(ps, x)
+            quant_stats.reinject_stats(sv)
+        else:
+            x, a = mem.wrap(f)(ps, x)
         if pending is not None:     # the previous block's epilogue lands
             aux = aux + pending     # only after this block was issued
         pending = a
@@ -769,6 +823,12 @@ def forward(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
         x = x[:, batch["prefix"].shape[1]:]
     logits = _lm_logits(cfg, params, x, plan)
     metrics = {"aux_loss": aux_total}
+    if quant_stats.stats_armed():
+        # final drain: every stack driver reinjected its threaded stats at
+        # this level, so the merged vector exits value_and_grad via has_aux
+        sv = quant_stats.drain_stats()
+        metrics["quant_sat_frac"] = sv[0]
+        metrics["quant_flush_frac"] = sv[1]
     if not compute_loss:
         return logits, metrics
     mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
@@ -779,8 +839,10 @@ def forward(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
 
 def _run_encdec_decoder(cfg, recipe, plan, params, x, positions, enc):
     """Decoder stack with cross-attention (scanned; cross params stacked)."""
+    armed = quant_stats.stats_armed()
+
     def group_body(carry, pslice):
-        xc, aux = carry
+        xc, aux = carry[:2]
         p_self, p_cross = pslice
         xc, a, _, _, _ = _sub_layer(cfg, recipe, plan, "global", cfg.moe,
                                     p_self, xc, positions)
@@ -790,13 +852,19 @@ def _run_encdec_decoder(cfg, recipe, plan, params, x, positions, enc):
         c_out, _ = _ab(cfg, p_cross, h, positions=positions, cross_kv=kv)
         xc = xc + c_out
         aux = aux + a
+        if armed:
+            return (xc, aux, jnp.maximum(carry[2],
+                                         quant_stats.drain_stats())), None
         return (xc, aux), None
 
     body = MemoryPlan.from_config(cfg).wrap(group_body)
-    (x, aux), _ = jax.lax.scan(
-        body, (x, jnp.float32(0.0)),
-        (params["layers"], params["cross_layers"]))
-    return x, aux
+    init = (x, jnp.float32(0.0)) + \
+        ((quant_stats.zero_stats(),) if armed else ())
+    carry, _ = jax.lax.scan(
+        body, init, (params["layers"], params["cross_layers"]))
+    if armed:
+        quant_stats.reinject_stats(carry[2])
+    return carry[0], carry[1]
 
 
 def rms_or_ln(cfg, x, p_cross):

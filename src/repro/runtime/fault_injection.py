@@ -1,0 +1,202 @@
+"""Deterministic fault injection for the numerics guardrails.
+
+Every guard in train/guards.py has a fault here that proves detection AND
+recovery (tests/test_guards.py drives the matrix).  Three fault families:
+
+  numeric   injected INTO THE TRACED COMPUTATION at a named hook point —
+            a NaN into a chosen activation quantize site, a bit-flip in an
+            FP8 wire payload (byte 0x7f = e4m3fn NaN), or a poisoned bucket
+            scale exponent (int8 127 = 2^127).  Hooks are consulted at
+            TRACE time via a contextvar (`apply`), so the default path
+            compiles to an identical jaxpr when no fault is armed.
+  host      a simulated host failure: flips the HealthMonitor's `failed`
+            bit so the existing ElasticTrainer re-mesh path fires.
+  disk      checkpoint corruption on the filesystem: rewrite a shard's
+            payload bytes (valid npz, wrong data — caught by the restore
+            fingerprint check) or truncate the npz (caught by the load
+            guard).  Both must surface as CheckpointCorruptError.
+
+jit-caching caveat: arming a contextvar at CALL time does nothing to a
+function that was already traced clean.  `FaultPlan.wrap` therefore wraps
+the UN-jitted step function and keeps one `jax.jit` instance per distinct
+fault spec — the spec is baked in at trace time (`with activate(spec):`),
+and clean steps reuse the one clean executable (no per-step recompiles).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUMERIC_KINDS = ("nan_activation", "payload_bitflip", "wire_scale")
+DISK_KINDS = ("ckpt_corrupt", "ckpt_truncate")
+HOST_KINDS = ("host_failure",)
+KINDS = NUMERIC_KINDS + DISK_KINDS + HOST_KINDS
+
+# numeric fault kind -> the hook point it fires at
+_POINT_OF = {"nan_activation": "activation",
+             "payload_bitflip": "wire_payload",
+             "wire_scale": "wire_exp"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault.  `site` scopes numeric faults to a quantize tag
+    (e.g. 'q_entry'; empty = any hooked site) and names the host id for
+    host_failure / the checkpoint step for disk faults (empty = latest)."""
+    kind: str
+    step: int
+    site: str = ""
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind}; "
+                             f"pick from {KINDS}")
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Fault]] = contextvars.ContextVar(
+    "active_fault", default=None)
+
+
+@contextlib.contextmanager
+def activate(fault: Optional[Fault]):
+    """Arm `fault` for the duration of a TRACE (see module docstring)."""
+    tok = _ACTIVE.set(fault)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def apply(point: str, tag: str, x):
+    """Hook call sites: returns `x` poisoned iff the armed fault targets
+    this (point, tag).  A no-op returning `x` unchanged when nothing is
+    armed — the hook contributes zero ops to the clean jaxpr."""
+    f = _ACTIVE.get()
+    if f is None or _POINT_OF.get(f.kind) != point:
+        return x
+    if f.site and f.site != tag:
+        return x
+    flat = x.reshape(-1)
+    if point == "activation":
+        bad = jnp.asarray(jnp.nan, x.dtype)
+    elif point == "wire_payload":
+        # 0x7f is the e4m3fn NaN encoding — a single flipped byte on the wire
+        bad = jax.lax.bitcast_convert_type(jnp.uint8(0x7F), x.dtype)
+    elif point == "wire_exp":
+        bad = jnp.asarray(127, x.dtype)      # scale 2^127: absurd exponent
+    else:  # pragma: no cover - _POINT_OF keeps this unreachable
+        raise ValueError(point)
+    return flat.at[0].set(bad).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# The schedule: which fault fires at which loop step.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    faults: Tuple[Fault, ...] = ()
+
+    def _at(self, step: int, kinds) -> Optional[Fault]:
+        for f in self.faults:
+            if f.step == step and f.kind in kinds:
+                return f
+        return None
+
+    def numeric_for(self, step: int) -> Optional[Fault]:
+        return self._at(step, NUMERIC_KINDS)
+
+    def host_for(self, step: int) -> Optional[Fault]:
+        return self._at(step, HOST_KINDS)
+
+    def disk_for(self, step: int) -> Optional[Fault]:
+        return self._at(step, DISK_KINDS)
+
+    def wrap(self, raw_step_fn) -> "FaultStepper":
+        """Wrap an UN-jitted train_step; the loop resolves the per-step
+        executable via `.for_step(step)`."""
+        return FaultStepper(raw_step_fn, self)
+
+
+class FaultStepper:
+    """Per-fault-spec jit cache around a raw (un-jitted) train_step."""
+
+    def __init__(self, raw_fn, plan: FaultPlan):
+        self._raw = raw_fn
+        self._plan = plan
+        self._cache = {}
+
+    def for_step(self, step: int):
+        fault = self._plan.numeric_for(step)
+        if fault not in self._cache:
+            raw = self._raw
+            if fault is None:
+                self._cache[fault] = jax.jit(raw)
+            else:
+                def faulted(state, batch, _f=fault):
+                    with activate(_f):          # armed during TRACING
+                        return raw(state, batch)
+                self._cache[fault] = jax.jit(faulted)
+        return self._cache[fault]
+
+    def __call__(self, state, batch):           # clean-path convenience
+        return self.for_step(-1)(state, batch)
+
+
+def apply_host_fault(fault: Fault, elastic) -> None:
+    """Mark a host failed on the existing HealthMonitor — the next
+    `ElasticTrainer.plan_step()` sees it and triggers the re-mesh path.
+    No-op when the host was already evicted: the rewound loop REPLAYS the
+    failure step, and a dead host cannot die twice."""
+    host = int(fault.site or 0)
+    st = elastic.monitor.hosts.get(host)
+    if st is not None:
+        st.failed = True
+
+
+# ---------------------------------------------------------------------------
+# Disk faults (operate on the checkpoint layout of checkpoint/checkpointing).
+# ---------------------------------------------------------------------------
+def _shard_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}", "shard_0.npz")
+
+
+def corrupt_checkpoint_shard(ckpt_dir: str, step: int) -> None:
+    """Rewrite the largest leaf's payload bytes (bitwise NOT) through a
+    VALID npz re-save: the archive still loads, so only the manifest
+    fingerprint / per-leaf shape checks can catch it."""
+    path = _shard_path(ckpt_dir, step)
+    with np.load(path) as data:
+        raw = {k: np.array(data[k]) for k in data.files}
+    victim = max(raw, key=lambda k: raw[k].size)
+    raw[victim] = np.ascontiguousarray(~raw[victim])
+    np.savez(path, **raw)
+
+
+def truncate_checkpoint_shard(ckpt_dir: str, step: int) -> None:
+    """Chop the shard file in half — a crash/partial-write torn shard."""
+    path = _shard_path(ckpt_dir, step)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+
+
+def apply_disk_fault(fault: Fault, ckpt_dir: str) -> Optional[int]:
+    """Apply a scheduled disk fault to the newest complete checkpoint (or
+    the explicit step in `fault.site`).  Returns the poisoned step."""
+    from repro.checkpoint import checkpointing
+    step = int(fault.site) if fault.site else \
+        checkpointing.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    if fault.kind == "ckpt_corrupt":
+        corrupt_checkpoint_shard(ckpt_dir, step)
+    else:
+        truncate_checkpoint_shard(ckpt_dir, step)
+    return step

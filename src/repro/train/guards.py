@@ -1,0 +1,199 @@
+"""Numerics guardrails: in-step FP8 anomaly detection + the recovery ladder.
+
+Two halves, split along the jit boundary:
+
+  in-jit   `evaluate` runs INSIDE train_step and folds the step's health
+           into a uint32 anomaly bitmask + a tiny carried state (grad-norm
+           EMA).  Everything it reads is already replica-uniform (pmean'd
+           loss, psum'd grad norm, pmax'd saturation/flush/wire flags), so
+           the flags replicate for free under shard_map and ride out with
+           the metrics the loop ALREADY fetches every step — detection
+           costs zero extra device syncs.
+  on-host  `GuardPolicy.observe` turns the fetched bitmask into the
+           recovery ladder: skip-step (discard the update — the previous
+           state is still a live Python reference, nothing replays), then
+           rollback to the last complete checkpoint after `rollback_after`
+           consecutive strikes, then graceful degradation (demote fp8_flow
+           to the bf16 recipe for `demote_steps` steps, then re-promote —
+           the bf16 step has no quantize sites, so a persistent FP8-path
+           fault is cured, not just retried), and finally a hard stop
+           after `give_up_after` total strikes.  Every transition is
+           logged as a structured event.
+
+The backward-island quantize sites (q_bwd_*, dact_quant, dgrad_*) are NOT
+stat-instrumented — their custom_vjp backward rules trace inside inner
+backward traces where a collected scalar could not escape without leaking.
+Backward saturation instead surfaces through the grad-norm spike and
+nonfinite-grad bits, which see the same blow-up one reduction later.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+
+# anomaly bitmask (uint32) --------------------------------------------------
+NONFINITE_LOSS = 1     # loss is NaN/inf
+NONFINITE_GRAD = 2     # global grad norm is NaN/inf
+GNORM_SPIKE = 4        # grad norm > spike_factor x carried EMA (post-warmup)
+FP8_SAT = 8            # forward quantize-site saturation fraction too high
+FP8_FLUSH = 16         # forward quantize-site underflow-flush fraction high
+WIRE_SCALE = 32        # wire guard fired: a bucket rode the bf16 fallback
+
+HARD_FLAGS = NONFINITE_LOSS | NONFINITE_GRAD | GNORM_SPIKE
+
+_FLAG_NAMES = ((NONFINITE_LOSS, "nonfinite_loss"),
+               (NONFINITE_GRAD, "nonfinite_grad"),
+               (GNORM_SPIKE, "gnorm_spike"),
+               (FP8_SAT, "fp8_sat"),
+               (FP8_FLUSH, "fp8_flush"),
+               (WIRE_SCALE, "wire_scale"))
+
+
+def flag_names(flags: int) -> str:
+    names = [n for bit, n in _FLAG_NAMES if int(flags) & bit]
+    return "|".join(names) or "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPlan:
+    """Static detection thresholds, closed over at trace time."""
+    ema_beta: float = 0.95       # grad-norm EMA decay
+    spike_factor: float = 4.0    # anomaly when gnorm > factor * EMA
+    spike_warmup: int = 10       # healthy steps before the spike guard arms
+    sat_frac_limit: float = 0.05   # fwd quantize |x/s| > fmax fraction
+    flush_frac_limit: float = 0.5  # fwd quantize nonzero->zero fraction
+    wire_exp_limit: int = 40     # |po2 exponent| beyond this is absurd
+                                 # (e4m3 grads live within ~2^+-20 of scale 1)
+
+
+def init_guard_state():
+    """The tiny carried state: grad-norm EMA + healthy-step counter.
+    Lives in `state['guard']`, replicated (P()) under shard_map."""
+    return {"gnorm_ema": jnp.float32(0.0), "steps": jnp.int32(0)}
+
+
+def evaluate(plan: GuardPlan, gstate, *, loss, gnorm, sat_frac=None,
+             flush_frac=None, wire_bad=None):
+    """In-jit anomaly fold.  All inputs must already be replica-uniform.
+    Returns (flags uint32, new_gstate, guard_metrics)."""
+    u32 = jnp.uint32
+
+    def bit(cond, b):
+        return jnp.where(cond, u32(b), u32(0))
+
+    loss = jnp.asarray(loss, jnp.float32)
+    gnorm = jnp.asarray(gnorm, jnp.float32)
+    flags = bit(~jnp.isfinite(loss), NONFINITE_LOSS)
+    flags = flags | bit(~jnp.isfinite(gnorm), NONFINITE_GRAD)
+    warm = gstate["steps"] >= plan.spike_warmup
+    ema = gstate["gnorm_ema"]
+    spike = warm & jnp.isfinite(gnorm) & (ema > 0) & \
+        (gnorm > plan.spike_factor * ema)
+    flags = flags | bit(spike, GNORM_SPIKE)
+    if sat_frac is not None:
+        flags = flags | bit(jnp.asarray(sat_frac, jnp.float32)
+                            > plan.sat_frac_limit, FP8_SAT)
+    if flush_frac is not None:
+        flags = flags | bit(jnp.asarray(flush_frac, jnp.float32)
+                            > plan.flush_frac_limit, FP8_FLUSH)
+    if wire_bad is not None:
+        flags = flags | bit(wire_bad, WIRE_SCALE)
+
+    # the EMA only learns from healthy steps, so one spike cannot drag the
+    # baseline up and mask the next one
+    ok = ((flags & u32(HARD_FLAGS)) == 0) & jnp.isfinite(gnorm)
+    seeded = jnp.where(gstate["steps"] == 0, gnorm,
+                       plan.ema_beta * ema + (1.0 - plan.ema_beta) * gnorm)
+    new_state = {"gnorm_ema": jnp.where(ok, seeded, ema),
+                 "steps": gstate["steps"] + jnp.where(ok, 1, 0).astype(
+                     jnp.int32)}
+    gmetrics = {"guard_flags": flags, "guard_gnorm_ema": new_state["gnorm_ema"]}
+    return flags, new_state, gmetrics
+
+
+# ---------------------------------------------------------------------------
+# Host-side recovery ladder.
+# ---------------------------------------------------------------------------
+class GuardGiveUp(RuntimeError):
+    """Raised when the anomaly budget is exhausted — the run is not
+    recoverable by skipping/rolling back/demoting."""
+
+
+@dataclasses.dataclass
+class Verdict:
+    skip: bool = False       # discard this step's update
+    rollback: bool = False   # restore the last complete checkpoint
+    demote: bool = False     # enter (or stay in) the bf16 fallback window
+
+
+@dataclasses.dataclass
+class GuardPolicy:
+    """Recovery ladder driven by the per-step anomaly bitmask.
+
+    Soft bits (FP8_SAT / FP8_FLUSH / WIRE_SCALE) are informational by
+    default: the wire guard already recovered in-step (bf16 fallback), and
+    saturation alone does not corrupt the update.  `skip_flags` widens the
+    skip set if a deployment wants to act on them."""
+    skip_flags: int = HARD_FLAGS
+    rollback_after: int = 3      # consecutive strikes -> restore checkpoint
+    demote_after: int = 5        # consecutive strikes -> bf16 fallback
+    demote_steps: int = 8        # fallback window length (steps)
+    give_up_after: int = 20      # total strikes -> GuardGiveUp
+
+    consecutive: int = 0
+    total: int = 0
+    demoted_until: int = -1
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def _event(self, log_fn: Callable, step: int, event: str, flags: int,
+               **extra):
+        rec = {"step": step, "event": event, "flags": int(flags),
+               "flag_names": flag_names(flags), **extra}
+        self.events.append(rec)
+        detail = " ".join(f"{k}={v}" for k, v in extra.items())
+        log_fn(f"[guard] step={step} event={event} "
+               f"flags={rec['flag_names']}{(' ' + detail) if detail else ''}")
+
+    def demoted(self, step: int) -> bool:
+        return step < self.demoted_until
+
+    def observe(self, step: int, flags: int, log_fn: Callable = print,
+                can_rollback: bool = True) -> Verdict:
+        flags = int(flags)
+        v = Verdict()
+        if flags and not (flags & self.skip_flags):
+            # soft-only anomaly: log it, keep the update
+            self._event(log_fn, step, "soft_anomaly", flags)
+            return v
+        if not flags:
+            if self.consecutive:
+                self._event(log_fn, step, "recovered", 0,
+                            after_strikes=self.consecutive)
+            self.consecutive = 0
+            if self.demoted_until == step:  # fallback window just ended
+                self._event(log_fn, step, "repromote", 0)
+            return v
+
+        self.consecutive += 1
+        self.total += 1
+        v.skip = True
+        if self.total >= self.give_up_after:
+            self._event(log_fn, step, "give_up", flags, total=self.total)
+            raise GuardGiveUp(
+                f"step {step}: {self.total} anomalous steps "
+                f"(flags={flag_names(flags)}) — giving up")
+        if self.consecutive >= self.demote_after:
+            v.demote = True
+            self.demoted_until = step + 1 + self.demote_steps
+            self._event(log_fn, step, "demote", flags,
+                        until=self.demoted_until)
+        elif self.consecutive >= self.rollback_after and can_rollback:
+            v.rollback = True
+            self._event(log_fn, step, "rollback", flags,
+                        consecutive=self.consecutive)
+        else:
+            self._event(log_fn, step, "skip", flags,
+                        consecutive=self.consecutive)
+        return v

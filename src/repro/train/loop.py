@@ -1,53 +1,133 @@
 """The training loop: checkpoint/restart, health monitoring, elastic
-re-meshing, async checkpointing — the control plane around train_step."""
+re-meshing, async checkpointing, and the numerics-guardrail recovery
+ladder — the control plane around train_step."""
 from __future__ import annotations
 
 import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpointing
 from repro.data.pipeline import DataConfig, make_batch
+from repro.runtime import fault_injection
 from repro.runtime.fault_tolerance import ElasticTrainer
+
+
+def _restore_latest_valid(ckpt_dir, state, shardings, log_fn):
+    """Newest complete checkpoint that passes the integrity checks; corrupt
+    steps (CheckpointCorruptError) are logged and skipped so one poisoned
+    shard cannot wedge the rollback path.  Returns (state, step) or None."""
+    for s in reversed(checkpointing.completed_steps(ckpt_dir)):
+        try:
+            st, _ = checkpointing.restore(ckpt_dir, state, step=s,
+                                          shardings=shardings)
+            return st, s
+        except checkpointing.CheckpointCorruptError as e:
+            log_fn(f"[loop] checkpoint step_{s} failed integrity check "
+                   f"({e}); falling back to an older step")
+    return None
 
 
 def run(train_step: Callable, state, data_cfg: DataConfig, *,
         n_steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
         log_every: int = 10, elastic: Optional[ElasticTrainer] = None,
         grad_accum: int = 1, fail_injector: Optional[Callable] = None,
-        restore_shardings=None, log_fn=print):
+        restore_shardings=None, log_fn=print, guard_policy=None,
+        fallback_step: Optional[Callable] = None,
+        fault_plan: Optional[fault_injection.FaultPlan] = None):
     """Runs `n_steps`, restarting from the latest checkpoint if present.
     `fail_injector(step)` lets tests simulate host failures/stragglers.
     `restore_shardings` (optional pytree of NamedSharding matching `state`,
     e.g. launch/sharding.dist_state_specs for ZeRO-1 flat state) re-shards
     on restore — restart onto a different DP mesh size just works because
-    the checkpoint holds the full logical arrays."""
+    the checkpoint holds the full logical arrays.
+
+    guard_policy (train/guards.GuardPolicy) drives the recovery ladder off
+    the 'guard_flags' metric a guarded train_step emits: skip-step (the
+    previous state is still a live reference — discard the update, replay
+    nothing), rollback to the last VALID checkpoint after K consecutive
+    strikes (rewinding `step` so the data pipeline replays those batches),
+    and demotion to `fallback_step` (a bf16-recipe step built with the
+    same GuardPlan) for a bounded window before re-promoting.
+
+    fault_plan (runtime/fault_injection.FaultPlan) schedules deterministic
+    faults: numeric ones are baked into per-spec jit traces when
+    `train_step` is a FaultStepper (`fault_plan.wrap(raw_step)`), host
+    failures flip the HealthMonitor, and disk faults corrupt checkpoint
+    shards on the way in."""
     start = 0
-    if ckpt_dir is not None:
-        latest = checkpointing.latest_step(ckpt_dir)
-        if latest is not None:
-            state, start = checkpointing.restore(
-                ckpt_dir, state, shardings=restore_shardings)
-            start += 1
-            log_fn(f"[loop] restored checkpoint step={start - 1}")
+    if ckpt_dir is not None and checkpointing.latest_step(ckpt_dir) is not None:
+        res = _restore_latest_valid(ckpt_dir, state, restore_shardings,
+                                    log_fn)
+        if res is not None:
+            state, rstep = res
+            start = rstep + 1
+            log_fn(f"[loop] restored checkpoint step={rstep}")
 
     history = []
     pending_save = None
-    for step in range(start, n_steps):
+
+    def _join_pending():
+        nonlocal pending_save
+        if pending_save is not None:
+            pending_save.join()     # re-raises a failed background write
+            pending_save = None
+
+    step = start
+    while step < n_steps:
         t0 = time.monotonic()
+        if fault_plan is not None and ckpt_dir is not None:
+            disk = fault_plan.disk_for(step)
+            if disk is not None:
+                _join_pending()
+                poisoned = fault_injection.apply_disk_fault(disk, ckpt_dir)
+                log_fn(f"[loop] injected {disk.kind} at step {step} "
+                       f"(checkpoint step_{poisoned})")
         batch = make_batch(data_cfg, step)
         if grad_accum > 1:
             batch = jax.tree.map(
                 lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
                                     *a.shape[1:]), batch)
-        state, metrics = train_step(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.monotonic() - t0
+        demoted = guard_policy is not None and fallback_step is not None \
+            and guard_policy.demoted(step)
+        fn = fallback_step if demoted else train_step
+        if hasattr(fn, "for_step"):     # FaultStepper: per-spec jit cache
+            fn = fn.for_step(step)
+        prev_state = state
+        state, metrics = fn(state, batch)
+        loss = float(metrics["loss"])   # the loop's one per-step fetch —
+        dt = time.monotonic() - t0      # guard flags ride the same metrics
         history.append({"step": step, "loss": loss, "dt": dt})
 
+        if guard_policy is not None:
+            flags = int(metrics.get("guard_flags", 0))
+            have_ckpt = ckpt_dir is not None and \
+                bool(checkpointing.completed_steps(ckpt_dir))
+            verdict = guard_policy.observe(step, flags, log_fn,
+                                           can_rollback=have_ckpt)
+            if verdict.skip:
+                state = prev_state      # discard the poisoned update
+                if verdict.rollback and have_ckpt:
+                    _join_pending()
+                    res = _restore_latest_valid(ckpt_dir, state,
+                                                restore_shardings, log_fn)
+                    if res is not None:
+                        state, rstep = res
+                        log_fn(f"[loop] rolled back to step {rstep}; "
+                               f"replaying from step {rstep + 1}")
+                        step = rstep + 1
+                        continue
+                step += 1
+                continue
+
         if elastic is not None:
+            if fault_plan is not None:
+                hf = fault_plan.host_for(step)
+                if hf is not None:
+                    fault_injection.apply_host_fault(hf, elastic)
+                    log_fn(f"[loop] injected host_failure "
+                           f"host={hf.site or 0} at step {step}")
             if fail_injector is not None:
                 fail_injector(step, elastic)
             elastic.step_report(0, dt)
@@ -58,8 +138,19 @@ def run(train_step: Callable, state, data_cfg: DataConfig, *,
                        f"checkpoint and continuing")
                 if ckpt_dir is not None and \
                         checkpointing.latest_step(ckpt_dir) is not None:
-                    state, _ = checkpointing.restore(
-                        ckpt_dir, state, shardings=restore_shardings)
+                    _join_pending()
+                    res = _restore_latest_valid(ckpt_dir, state,
+                                                restore_shardings, log_fn)
+                    if res is not None:
+                        state, rstep = res
+                        # rewind so the optimizer steps between the
+                        # checkpoint and the failure are REPLAYED (the data
+                        # pipeline is a pure function of step, so the
+                        # survivors re-derive exactly those batches)
+                        log_fn(f"[loop] rewound to step {rstep + 1} after "
+                               f"remesh (was {step + 1})")
+                        step = rstep + 1
+                        continue
             elif reassign:
                 log_fn(f"[loop] stragglers reassigned: {reassign}")
 
@@ -68,10 +159,9 @@ def run(train_step: Callable, state, data_cfg: DataConfig, *,
                    f"gnorm={float(metrics.get('grad_norm', 0)):.3f} "
                    f"dt={dt*1e3:.0f}ms")
         if ckpt_dir is not None and step % ckpt_every == 0 and step > 0:
-            if pending_save is not None:
-                pending_save.join()
+            _join_pending()
             pending_save = checkpointing.save(ckpt_dir, step, state,
                                               async_=True)
-    if pending_save is not None:
-        pending_save.join()
+        step += 1
+    _join_pending()
     return state, history

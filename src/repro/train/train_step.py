@@ -19,6 +19,7 @@ Two reduction regimes:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Optional
 
@@ -26,15 +27,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import quant
 from repro.core.recipes import Recipe
 from repro.models.lm import ParallelPlan, forward
 from repro.optim import adamw, schedules
+from repro.train import guards
 
 
 def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                     opt: adamw.AdamWConfig, *, grad_accum: int = 1,
                     dist: Optional[Any] = None,
-                    total_steps: int = 100_000, warmup_steps: int = 100):
+                    total_steps: int = 100_000, warmup_steps: int = 100,
+                    guard: Optional[guards.GuardPlan] = None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     state = {'params', 'opt': adamw state (or dist state when dist is set)}
@@ -43,12 +47,18 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
     via lax.scan over the leading accum axis of the batch.
 
     dist: an active repro.dist.DistPlan routes the step through the
-    quantized ZeRO-1 wire (see _make_dist_train_step)."""
+    quantized ZeRO-1 wire (see _make_dist_train_step).
+
+    guard: a train/guards.py GuardPlan arms in-step anomaly detection —
+    the step carries state['guard'] (grad-norm EMA), collects FP8
+    quantize-site stats, guards the DP wire, and emits a 'guard_flags'
+    uint32 in the metrics.  guard=None leaves the traced step bitwise
+    identical to an unguarded build (the detection code never traces)."""
     if dist is not None and dist.active:
         return _make_dist_train_step(cfg, recipe, plan, opt, dist,
                                      grad_accum=grad_accum,
                                      total_steps=total_steps,
-                                     warmup_steps=warmup_steps)
+                                     warmup_steps=warmup_steps, guard=guard)
 
     def loss_fn(params, mb):
         loss, metrics = forward(cfg, recipe, plan, params, mb)
@@ -56,8 +66,11 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
 
     def train_step(state, batch):
         params = state["params"]
-        loss, metrics, grads = _local_grads(loss_fn, params, batch,
-                                            grad_accum)
+        ctx = quant.collect_stats() if guard is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            loss, metrics, grads = _local_grads(loss_fn, params, batch,
+                                                grad_accum)
         lr_scale = schedules.warmup_cosine(
             state["opt"]["step"], total_steps=total_steps,
             warmup_steps=warmup_steps)
@@ -66,7 +79,16 @@ def make_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
         metrics = dict(metrics)
         metrics.update(opt_metrics)
         metrics["loss"] = loss
-        return {"params": new_params, "opt": new_opt}, metrics
+        new_state = {"params": new_params, "opt": new_opt}
+        if guard is not None:
+            flags, new_g, gm = guards.evaluate(
+                guard, state["guard"], loss=loss,
+                gnorm=opt_metrics["grad_norm"],
+                sat_frac=metrics.get("quant_sat_frac"),
+                flush_frac=metrics.get("quant_flush_frac"))
+            new_state["guard"] = new_g
+            metrics.update(gm)
+        return new_state, metrics
 
     return train_step
 
@@ -104,8 +126,8 @@ def _local_grads(loss_fn, params, batch, grad_accum):
 # compute instead of waiting for all of it (DistPlan schedule='stream').
 # ---------------------------------------------------------------------------
 def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
-                    wire, grad_accum: int = 1):
-    """Returns (loss, metrics, owned, sens_done, sens_raw):
+                    wire, grad_accum: int = 1, guard=None):
+    """Returns (loss, metrics, owned, sens_done, sens_raw, wire_bad):
 
     owned      aligns with layout.buckets (the layered, reverse-layer-order
                layout) and holds each bucket's already-reduced f32 shard;
@@ -162,6 +184,8 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
     sens_raw = {}                   # index -> local (accumulated) gradient
     loss_sum = jnp.float32(0.0)
     aux_sum = jnp.float32(0.0)
+    armed = quant.stats_armed()     # guard stats threaded through each vjp
+    wire_bad = jnp.bool_(False) if guard is not None else None
 
     for m in range(grad_accum):
         mb = batch if grad_accum == 1 else \
@@ -189,9 +213,15 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
                     xc, a = layer_forward(cfg, recipe, lplan, kind, moe, p,
                                           xc, positions)
                     a_blk = a_blk + a
+                if armed:   # guard stats: drained in-block, threaded out
+                    return xc, a_blk, quant.drain_stats()
                 return xc, a_blk
 
-            (x, a), vjp_b = jax.vjp(mem.wrap(f), ps, x)
+            if armed:
+                (x, a, sv), vjp_b = jax.vjp(mem.wrap(f), ps, x)
+                quant.reinject_stats(sv)
+            else:
+                (x, a), vjp_b = jax.vjp(mem.wrap(f), ps, x)
             recs.append((blk, vjp_b))
             if pending is not None:
                 aux_total = aux_total + pending
@@ -220,7 +250,10 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
         g_hp, g_x = head_vjp(jnp.float32(1.0))
         g_aux = jnp.float32(AUX_LOSS_COEF)      # d loss / d aux_l
         for blk, vjp_b in reversed(recs):
-            g_ps, g_x = vjp_b((g_x, g_aux))
+            if armed:   # zero cotangent for the threaded stats output
+                g_ps, g_x = vjp_b((g_x, g_aux, quant.zero_stats()))
+            else:
+                g_ps, g_x = vjp_b((g_x, g_aux))
             for (stack, l, _k, _mo, _p), g_pl in zip(reversed(blk),
                                                      reversed(g_ps)):
                 g_leaves = jax.tree.leaves(g_pl)
@@ -234,9 +267,14 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
                         # issued HERE, between layer l's and layer l-1's
                         # backward GEMMs: the pre-agreed-scale quantize +
                         # single-uint8-message RS (of the microbatch MEAN)
-                        owned[bi] = grad_comm.reduce_scatter_bucket(
-                            flat * inv if grad_accum > 1 else flat,
-                            axis, n_dp, wire)
+                        flat_m = flat * inv if grad_accum > 1 else flat
+                        if guard is not None:
+                            owned[bi], bad = grad_comm.reduce_scatter_bucket(
+                                flat_m, axis, n_dp, wire, guard=guard)
+                            wire_bad = jnp.logical_or(wire_bad, bad)
+                        else:
+                            owned[bi] = grad_comm.reduce_scatter_bucket(
+                                flat_m, axis, n_dp, wire)
                         flat_acc[bi] = None
                     else:
                         flat_acc[bi] = flat
@@ -280,7 +318,12 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
         for i, pieces in sens_done_parts.items()}
     loss = loss_sum / grad_accum
     metrics = {"aux_loss": aux_sum / grad_accum, "loss": loss}
-    return loss, metrics, owned, sens_done, sens_raw
+    if armed:
+        # final drain: per-block reinjects + the dp_wire quantize records
+        sv = quant.drain_stats()
+        metrics["quant_sat_frac"] = sv[0]
+        metrics["quant_flush_frac"] = sv[1]
+    return loss, metrics, owned, sens_done, sens_raw, wire_bad
 
 
 # ---------------------------------------------------------------------------
@@ -288,7 +331,7 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
 # ---------------------------------------------------------------------------
 def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                           opt: adamw.AdamWConfig, dist, *, grad_accum: int,
-                          total_steps: int, warmup_steps: int):
+                          total_steps: int, warmup_steps: int, guard=None):
     from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map
     from repro.dist import grad_comm
@@ -343,8 +386,9 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 raise ValueError(
                     f"DistPlan schedule='stream' cannot run: {reason}")
 
-        def body(params, opt_st, batch):
+        def body_impl(params, opt_st, batch, gstate):
             pleaves = treedef.flatten_up_to(params)
+            wire_bad = None
             if dist.schedule == "stream":
                 # staged layer program: per-layer backward, bucket i's
                 # quantize + reduce-scatter issued the moment layer i's
@@ -353,10 +397,10 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 # sensitive leaves stream per layer on the bf16 wire;
                 # grad_accum > 1 accumulates locally and wires once on the
                 # last microbatch.
-                loss, fwd_metrics, owned, sens_done, sens_raw = \
+                loss, fwd_metrics, owned, sens_done, sens_raw, wire_bad = \
                     _streamed_grads(cfg, recipe, local_plan, params, batch,
                                     layout, axis, n_dp, dist.wire,
-                                    grad_accum=grad_accum)
+                                    grad_accum=grad_accum, guard=guard)
             else:
                 loss, fwd_metrics, grads = _local_grads(
                     loss_fn, params, batch, grad_accum)
@@ -365,9 +409,26 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 # quantized reduce-scatter: one fused uint8 message per
                 # bucket, scales pre-agreed (scale_sync) so the sum never
                 # re-quantizes
-                owned = [grad_comm.reduce_scatter_bucket(
-                    bucket_flat(b, gleaves), axis, n_dp, dist.wire)
-                    for b in layout.buckets]
+                if guard is not None:
+                    pairs = [grad_comm.reduce_scatter_bucket(
+                        bucket_flat(b, gleaves), axis, n_dp, dist.wire,
+                        guard=guard) for b in layout.buckets]
+                    owned = [o for o, _ in pairs]
+                    wire_bad = jnp.bool_(False)
+                    for _, bad in pairs:
+                        wire_bad = jnp.logical_or(wire_bad, bad)
+                    # wire-quantize stats recorded during the RS, after
+                    # forward() drained its own: merge them in
+                    wire_sv = quant.drain_stats()
+                    fwd_metrics = dict(fwd_metrics)
+                    fwd_metrics["quant_sat_frac"] = jnp.maximum(
+                        fwd_metrics["quant_sat_frac"], wire_sv[0])
+                    fwd_metrics["quant_flush_frac"] = jnp.maximum(
+                        fwd_metrics["quant_flush_frac"], wire_sv[1])
+                else:
+                    owned = [grad_comm.reduce_scatter_bucket(
+                        bucket_flat(b, gleaves), axis, n_dp, dist.wire)
+                        for b in layout.buckets]
                 sens_raw = {i: gleaves[i] for i, _ in layout.sensitive}
                 sens_done = {}
             sens_g = {p: sens_done[p] if p in sens_done
@@ -444,12 +505,26 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                 treedef, [new_leaves[i] for i in range(len(pleaves))])
             new_opt = {"step": step, "flat": tuple(new_flat),
                        "sens": new_sens}
-            metrics = {k: jax.lax.pmean(v, axis)
+            # quant_* stats reduce by pmax (an anomaly ANYWHERE must trip
+            # the replica-uniform flag); everything else stays pmean
+            metrics = {k: jax.lax.pmax(v, axis) if k.startswith("quant_")
+                       else jax.lax.pmean(v, axis)
                        for k, v in dict(fwd_metrics).items()}
             metrics["loss"] = jax.lax.pmean(loss, axis)
             metrics["grad_norm"] = gnorm
             metrics["lr"] = lr
-            return new_params, new_opt, metrics
+            if guard is None:
+                return new_params, new_opt, metrics
+            # all evaluate() inputs are replica-uniform (pmean/psum/pmax
+            # above; wire_anomaly pmaxes internally), so flags and the new
+            # guard state replicate for free under out_specs P()
+            flags, new_g, gm = guards.evaluate(
+                guard, gstate, loss=metrics["loss"], gnorm=gnorm,
+                sat_frac=metrics.get("quant_sat_frac"),
+                flush_frac=metrics.get("quant_flush_frac"),
+                wire_bad=wire_bad)
+            metrics.update(gm)
+            return new_params, new_opt, metrics, new_g
 
         lead = 1 if grad_accum > 1 else 0
         batch_specs = jax.tree.map(
@@ -457,23 +532,45 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
         opt_in = {"step": P(),
                   "flat": tuple(P(axis, None) for _ in layout.buckets),
                   "sens": P()}
+        if guard is None:
+            def body(params, opt_st, batch):
+                return body_impl(params, opt_st, batch, None)
+
+            sm = shard_map(body, mesh=mesh,
+                           in_specs=(P(), opt_in, batch_specs),
+                           out_specs=(P(), opt_in, P()))
+            new_params, new_opt, metrics = sm(params, state["opt"], batch)
+            return {"params": new_params, "opt": new_opt}, metrics
+
+        def body(params, opt_st, batch, gstate):
+            with quant.collect_stats():
+                return body_impl(params, opt_st, batch, gstate)
+
         sm = shard_map(body, mesh=mesh,
-                       in_specs=(P(), opt_in, batch_specs),
-                       out_specs=(P(), opt_in, P()))
-        new_params, new_opt, metrics = sm(params, state["opt"], batch)
-        return {"params": new_params, "opt": new_opt}, metrics
+                       in_specs=(P(), opt_in, batch_specs, P()),
+                       out_specs=(P(), opt_in, P(), P()))
+        new_params, new_opt, metrics, new_g = sm(
+            params, state["opt"], batch, state["guard"])
+        return {"params": new_params, "opt": new_opt, "guard": new_g}, \
+            metrics
 
     return train_step
 
 
 def init_train_state(cfg: ArchConfig, opt: adamw.AdamWConfig, key,
-                     dtype=jnp.bfloat16, dist=None) -> Dict[str, Any]:
+                     dtype=jnp.bfloat16, dist=None,
+                     guard: Optional[guards.GuardPlan] = None
+                     ) -> Dict[str, Any]:
     from repro.models.lm import init_params
     params = init_params(cfg, key, dtype)
     if dist is not None and dist.active:
         from repro.dist import opt_state as ost
         from repro.dist.plan import build_layout
         layout = build_layout(params, dist)
-        return {"params": params,
-                "opt": ost.init_dist_state(opt, params, layout, dist)}
-    return {"params": params, "opt": adamw.init_state(opt, params)}
+        state = {"params": params,
+                 "opt": ost.init_dist_state(opt, params, layout, dist)}
+    else:
+        state = {"params": params, "opt": adamw.init_state(opt, params)}
+    if guard is not None:
+        state["guard"] = guards.init_guard_state()
+    return state

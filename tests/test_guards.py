@@ -1,0 +1,380 @@
+"""Numerics guardrails: anomaly detection bits, the host-side recovery
+ladder, checkpoint integrity, and the deterministic fault-injection matrix
+(every fault class detected within one step and recovered).
+
+The heavyweight tests run the REAL training loop (train/loop.py) around a
+tiny model, with faults scheduled by runtime/fault_injection.FaultPlan —
+numeric faults are baked into per-spec jit traces (FaultStepper), disk
+faults corrupt checkpoint shards, host faults flip the HealthMonitor.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import checkpointing
+from repro.configs import get_arch
+from repro.core import casts
+from repro.core.recipes import get_recipe
+from repro.data.pipeline import DataConfig, make_batch
+from repro.dist import DistPlan
+from repro.models.lm import ParallelPlan
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import fault_injection as fi
+from repro.runtime.fault_tolerance import ElasticTrainer
+from repro.train import guards
+from repro.train.guards import (FP8_FLUSH, FP8_SAT, GNORM_SPIKE, HARD_FLAGS,
+                                NONFINITE_GRAD, NONFINITE_LOSS, WIRE_SCALE,
+                                GuardGiveUp, GuardPlan, GuardPolicy)
+from repro.train.loop import _restore_latest_valid, run as run_loop
+from repro.train.train_step import init_train_state, make_train_step
+from tests.conftest import make_mesh11
+
+
+def _build(recipe_name="fp8_flow", guard=None, dist=None, seq=32, batch=2):
+    """Tiny model + UN-jitted step (so FaultPlan.wrap can own the jit)."""
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh = make_mesh11()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=3e-3)
+    recipe = get_recipe(recipe_name)
+    raw = make_train_step(cfg, recipe, plan, opt, dist=dist,
+                          total_steps=200, warmup_steps=5, guard=guard)
+    state = init_train_state(cfg, opt, jax.random.key(0), dist=dist,
+                             guard=guard)
+    data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+    return cfg, mesh, raw, state, data
+
+
+# ---------------------------------------------------------------------------
+# In-jit detection: guards.evaluate unit behaviour.
+# ---------------------------------------------------------------------------
+def test_flag_names():
+    assert guards.flag_names(0) == "none"
+    assert guards.flag_names(NONFINITE_LOSS | WIRE_SCALE) == \
+        "nonfinite_loss|wire_scale"
+
+
+def test_evaluate_nonfinite_and_spike_bits():
+    plan = GuardPlan(spike_factor=4.0, spike_warmup=2)
+    g = guards.init_guard_state()
+    # healthy steps seed then decay the EMA; steps counter advances
+    for _ in range(3):
+        flags, g, _ = guards.evaluate(plan, g, loss=jnp.float32(2.0),
+                                      gnorm=jnp.float32(1.0))
+        assert int(flags) == 0
+    assert int(g["steps"]) == 3
+    assert float(g["gnorm_ema"]) == pytest.approx(1.0)
+    # NaN loss / inf grad set the hard bits and FREEZE the EMA
+    flags, g2, _ = guards.evaluate(plan, g, loss=jnp.float32(np.nan),
+                                   gnorm=jnp.float32(np.inf))
+    assert int(flags) & NONFINITE_LOSS
+    assert int(flags) & NONFINITE_GRAD
+    assert float(g2["gnorm_ema"]) == float(g["gnorm_ema"])
+    assert int(g2["steps"]) == int(g["steps"])
+    # a 10x grad-norm jump post-warmup is a spike; EMA again frozen
+    flags, g3, gm = guards.evaluate(plan, g, loss=jnp.float32(2.0),
+                                    gnorm=jnp.float32(10.0))
+    assert int(flags) == GNORM_SPIKE
+    assert float(g3["gnorm_ema"]) == float(g["gnorm_ema"])
+    assert int(gm["guard_flags"]) == GNORM_SPIKE
+    # before warmup the same jump is NOT a spike (EMA still learning)
+    fresh = guards.init_guard_state()
+    flags, fresh, _ = guards.evaluate(plan, fresh, loss=jnp.float32(2.0),
+                                      gnorm=jnp.float32(1.0))
+    flags, _, _ = guards.evaluate(plan, fresh, loss=jnp.float32(2.0),
+                                  gnorm=jnp.float32(10.0))
+    assert int(flags) == 0
+
+
+def test_evaluate_fp8_and_wire_bits():
+    plan = GuardPlan(sat_frac_limit=0.05, flush_frac_limit=0.5)
+    g = guards.init_guard_state()
+    flags, _, _ = guards.evaluate(plan, g, loss=jnp.float32(1.0),
+                                  gnorm=jnp.float32(1.0),
+                                  sat_frac=jnp.float32(0.2),
+                                  flush_frac=jnp.float32(0.9),
+                                  wire_bad=jnp.bool_(True))
+    assert int(flags) == FP8_SAT | FP8_FLUSH | WIRE_SCALE
+    # soft bits are not in the hard set — the policy keeps the update
+    assert int(flags) & HARD_FLAGS == 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side recovery ladder (pure python — no jax).
+# ---------------------------------------------------------------------------
+def test_policy_ladder_skip_then_rollback_then_demote():
+    pol = GuardPolicy(rollback_after=3, demote_after=5, demote_steps=4,
+                      give_up_after=50)
+    log = lambda *a: None
+    # strikes 1-2: skip only
+    for s in (10, 11):
+        v = pol.observe(s, NONFINITE_LOSS, log)
+        assert v.skip and not v.rollback and not v.demote
+    # strike 3: rollback (checkpoint available)
+    v = pol.observe(12, NONFINITE_LOSS, log, can_rollback=True)
+    assert v.skip and v.rollback
+    # strike 4 without a checkpoint: skip again, no rollback
+    v = pol.observe(13, NONFINITE_LOSS, log, can_rollback=False)
+    assert v.skip and not v.rollback
+    # strike 5: demote for demote_steps
+    v = pol.observe(14, NONFINITE_LOSS, log)
+    assert v.demote and pol.demoted(15) and pol.demoted(18)
+    assert not pol.demoted(19)
+    # clean step at the window end fires the repromote event
+    pol.observe(19, 0, log)
+    names = [e["event"] for e in pol.events]
+    assert names == ["skip", "skip", "rollback", "skip", "demote",
+                     "recovered", "repromote"]
+
+
+def test_policy_soft_flags_keep_update():
+    pol = GuardPolicy()
+    v = pol.observe(5, WIRE_SCALE | FP8_SAT, lambda *a: None)
+    assert not v.skip and not v.rollback and not v.demote
+    assert pol.events[-1]["event"] == "soft_anomaly"
+    assert pol.consecutive == 0
+
+
+def test_policy_give_up():
+    pol = GuardPolicy(give_up_after=3)
+    log = lambda *a: None
+    pol.observe(1, NONFINITE_LOSS, log, can_rollback=False)
+    pol.observe(2, NONFINITE_LOSS, log, can_rollback=False)
+    with pytest.raises(GuardGiveUp):
+        pol.observe(3, NONFINITE_LOSS, log, can_rollback=False)
+    assert pol.events[-1]["event"] == "give_up"
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: corruption detected, rollback walks past it.
+# ---------------------------------------------------------------------------
+def _tiny_tree():
+    return {"a": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": {"c": jnp.ones((4, 4), jnp.bfloat16)}}
+
+
+def test_restore_detects_corrupt_payload(tmp_path):
+    d = str(tmp_path)
+    tree = _tiny_tree()
+    checkpointing.save(d, 1, tree)
+    checkpointing.save(d, 2, tree)
+    fi.corrupt_checkpoint_shard(d, 2)
+    with pytest.raises(checkpointing.CheckpointCorruptError):
+        checkpointing.restore(d, tree, step=2)
+    # the loop's rollback helper walks past the poisoned step
+    msgs = []
+    res = _restore_latest_valid(d, tree, None, msgs.append)
+    assert res is not None
+    _, step = res
+    assert step == 1
+    assert any("failed integrity check" in m for m in msgs)
+
+
+def test_restore_detects_truncated_shard(tmp_path):
+    d = str(tmp_path)
+    checkpointing.save(d, 1, _tiny_tree())
+    fi.truncate_checkpoint_shard(d, 1)
+    with pytest.raises(checkpointing.CheckpointCorruptError):
+        checkpointing.restore(d, _tiny_tree(), step=1)
+
+
+def test_restore_requires_complete_marker(tmp_path):
+    d = str(tmp_path)
+    checkpointing.save(d, 1, _tiny_tree())
+    os.remove(os.path.join(d, "step_1", ".COMPLETE"))
+    with pytest.raises(checkpointing.CheckpointCorruptError):
+        checkpointing.restore(d, _tiny_tree(), step=1)
+
+
+def test_async_save_failure_reraises(tmp_path):
+    # ckpt_dir collides with an existing FILE: the background write fails
+    # and the exception must surface at join(), not vanish in the thread
+    bad = os.path.join(str(tmp_path), "not_a_dir")
+    with open(bad, "w") as f:
+        f.write("x")
+    handle = checkpointing.save(bad, 1, _tiny_tree(), async_=True)
+    with pytest.raises(Exception):
+        handle.join()
+
+
+# ---------------------------------------------------------------------------
+# Guards off => the step is unchanged (jaxpr + cast ledger).
+# ---------------------------------------------------------------------------
+def test_unguarded_step_is_unchanged():
+    cfg, mesh, raw, state, data = _build(guard=None)
+    batch = make_batch(data, 0)
+    assert "guard" not in state
+    with mesh:
+        j_plain = str(jax.make_jaxpr(raw)(state, batch))
+        # unarmed fault hooks contribute zero ops: tracing through the
+        # FaultStepper's clean path and under activate(None) is identical
+        with fi.activate(None):
+            j_hooked = str(jax.make_jaxpr(raw)(state, batch))
+        stepper = fi.FaultPlan().wrap(raw)
+        j_stepper = str(jax.make_jaxpr(stepper._raw)(state, batch))
+        _, metrics = jax.jit(raw)(state, batch)
+    assert j_plain == j_hooked == j_stepper
+    assert not any(k.startswith(("guard_", "quant_")) for k in metrics)
+
+
+def test_guard_leaves_cast_ledger_unchanged():
+    """The 2-cast fp8_flow ledger must be IDENTICAL with guards armed —
+    stats collection reuses quantized values (or recomputes outside the
+    ledgered quantize), never adds a counted activation cast."""
+    _, mesh, raw_u, state_u, data = _build(guard=None)
+    _, _, raw_g, state_g, _ = _build(guard=GuardPlan())
+    batch = make_batch(data, 0)
+    with mesh, casts.ledger() as led_u:
+        jax.jit(raw_u)(state_u, batch)
+    with mesh, casts.ledger() as led_g:
+        _, metrics = jax.jit(raw_g)(state_g, batch)
+    assert led_u.by_tag() == led_g.by_tag()
+    assert led_u.activation_casts() == led_g.activation_casts()
+    # and the guarded build actually reports health
+    assert "guard_flags" in metrics
+    assert int(metrics["guard_flags"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# The fault-injection matrix: detection within ONE step + recovery.
+# ---------------------------------------------------------------------------
+def test_fault_matrix_detect_and_recover_with_parity():
+    """Parity harness under injection: a NaN'd activation (step 3), a
+    bit-flipped wire payload (step 7) and a poisoned bucket scale
+    (step 11) against the quantized ZeRO-1 wire.  Each fault flags ON the
+    faulted step; the NaN is skipped, the wire faults recover in-step via
+    the bf16-bucket fallback; the run finishes green and tracks a clean
+    bf16 baseline (30 steps — past the steep early descent, where one
+    legitimately skipped update no longer dominates the loss gap)."""
+    dist = DistPlan(axis="data", schedule="stream")
+    guard = GuardPlan()
+    _, mesh, raw, state, data = _build(guard=guard, dist=dist)
+    plan_f = fi.FaultPlan((fi.Fault("nan_activation", 3, "q_entry"),
+                           fi.Fault("payload_bitflip", 7),
+                           fi.Fault("wire_scale", 11)))
+    stepper = plan_f.wrap(raw)
+    pol = GuardPolicy()
+    with mesh:
+        _, hist = run_loop(stepper, state, data, n_steps=30,
+                           guard_policy=pol, fault_plan=plan_f,
+                           log_every=1000, log_fn=lambda *a: None)
+    by_step = {e["step"]: e for e in pol.events}
+    # NaN activation: hard nonfinite bits, caught on the faulted step
+    assert 3 in by_step and by_step[3]["event"] == "skip"
+    assert by_step[3]["flags"] & (NONFINITE_LOSS | NONFINITE_GRAD)
+    # wire faults: WIRE_SCALE flagged on the faulted step, update kept
+    for s in (7, 11):
+        assert s in by_step and by_step[s]["event"] == "soft_anomaly"
+        assert by_step[s]["flags"] & WIRE_SCALE
+    # in-step recovery: every non-skipped loss is finite
+    losses = np.array([h["loss"] for h in hist])
+    steps = np.array([h["step"] for h in hist])
+    assert np.isfinite(losses[steps != 3]).all()
+    # parity vs a clean bf16 run on identical data (mini Fig. 6 shape)
+    _, mesh_b, raw_b, state_b, _ = _build("bf16")
+    with mesh_b:
+        _, hist_b = run_loop(jax.jit(raw_b), state_b, data, n_steps=30,
+                             log_every=1000, log_fn=lambda *a: None)
+    l_b = np.array([h["loss"] for h in hist_b])
+    l_f = losses[np.isfinite(losses)]
+    assert l_b[-8:].mean() < l_b[:3].mean() - 0.05   # baseline learns
+    assert l_f[-8:].mean() < l_f[:3].mean() - 0.05   # injected run learns
+    gap = abs(l_b[-8:].mean() - l_f[-8:].mean())
+    assert gap < 0.2, f"parity gap {gap} under injection"
+
+
+def test_recovery_ladder_rollback_demote_repromote(tmp_path):
+    """A persistent fp8-path fault (NaN at every step 4..9) climbs the full
+    ladder: skip, rollback (which replays INTO the fault), demote to the
+    bf16 fallback step (curing it — bf16 has no quantize sites), and
+    repromote after the window."""
+    guard = GuardPlan()
+    cfg, mesh, raw, state, data = _build(guard=guard)
+    _, _, raw_bf16, _, _ = _build("bf16", guard=guard)
+    plan_f = fi.FaultPlan(tuple(
+        fi.Fault("nan_activation", s, "q_entry") for s in range(4, 10)))
+    stepper = plan_f.wrap(raw)
+    pol = GuardPolicy(rollback_after=3, demote_after=5, demote_steps=6,
+                      give_up_after=50)
+    with mesh:
+        _, hist = run_loop(stepper, state, data, n_steps=13,
+                           ckpt_dir=str(tmp_path), ckpt_every=3,
+                           guard_policy=pol, fault_plan=plan_f,
+                           fallback_step=jax.jit(raw_bf16),
+                           log_every=1000, log_fn=lambda *a: None)
+    names = [e["event"] for e in pol.events]
+    for expected in ("skip", "rollback", "demote", "recovered", "repromote"):
+        assert expected in names, f"missing {expected} in {names}"
+    # ladder order: first skip < first rollback < demote < repromote
+    assert names.index("skip") < names.index("rollback") < \
+        names.index("demote") < names.index("repromote")
+    # the run finished green past the fault window
+    assert hist[-1]["step"] == 12
+    assert np.isfinite(hist[-1]["loss"])
+    assert not pol.demoted(13)
+
+
+def test_give_up_without_checkpoint():
+    """No checkpoint + persistent NaN: skip-only ladder exhausts the
+    anomaly budget and the loop raises instead of spinning forever."""
+    guard = GuardPlan()
+    _, mesh, raw, state, data = _build(guard=guard)
+    plan_f = fi.FaultPlan(tuple(
+        fi.Fault("nan_activation", s, "q_entry") for s in range(1, 6)))
+    pol = GuardPolicy(give_up_after=3)
+    with mesh, pytest.raises(GuardGiveUp):
+        run_loop(plan_f.wrap(raw), state, data, n_steps=10,
+                 guard_policy=pol, fault_plan=plan_f,
+                 log_every=1000, log_fn=lambda *a: None)
+
+
+def test_disk_fault_restart_rolls_past_corrupt(tmp_path):
+    """A checkpoint shard corrupted mid-run (valid npz, wrong bytes) is
+    caught by the restore fingerprint check on restart, and the loop falls
+    back to the previous complete step instead of loading garbage."""
+    d = str(tmp_path)
+    _, mesh, raw, state, data = _build()
+    step = jax.jit(raw)
+    plan_f = fi.FaultPlan((fi.Fault("ckpt_corrupt", 5),))
+    with mesh:
+        run_loop(step, state, data, n_steps=6, ckpt_dir=d, ckpt_every=2,
+                 fault_plan=plan_f, log_every=1000, log_fn=lambda *a: None)
+        # saves landed at steps 2 and 4; the fault poisoned step_4
+        msgs = []
+        _, hist2 = run_loop(step, state, data, n_steps=8, ckpt_dir=d,
+                            ckpt_every=100, log_every=1000,
+                            log_fn=msgs.append)
+    assert any("step_4 failed integrity check" in m for m in msgs)
+    assert hist2[0]["step"] == 3          # resumed from step 2, not 4
+    assert np.isfinite(hist2[-1]["loss"])
+
+
+def test_host_failure_remesh_rewinds_step(tmp_path):
+    """A scheduled host failure triggers the elastic re-mesh path; the
+    loop restores the last checkpoint AND rewinds `step`, so the optimizer
+    steps between checkpoint and failure are replayed (visible as
+    duplicated step ids in the history)."""
+    d = str(tmp_path)
+    _, mesh, raw, state, data = _build()
+    elastic = ElasticTrainer(n_data_shards=4, timeout=3600.0)
+    plan_f = fi.FaultPlan((fi.Fault("host_failure", 4, "2"),))
+
+    def beats(step, el):
+        for h in list(el.monitor.hosts):
+            el.monitor.beat(h, 0.1)
+
+    with mesh:
+        _, hist = run_loop(jax.jit(raw), state, data, n_steps=8,
+                           ckpt_dir=d, ckpt_every=2, elastic=elastic,
+                           fail_injector=beats, fault_plan=plan_f,
+                           log_every=1000, log_fn=lambda *a: None)
+    assert elastic.generation == 1
+    assert elastic.n_data_shards == 3
+    steps = [h["step"] for h in hist]
+    # steps 3 and 4 ran twice: once before the failure, once replayed
+    assert steps.count(4) == 2 and steps.count(3) == 2
+    assert sorted(set(steps)) == list(range(8))
+    assert np.isfinite(hist[-1]["loss"])
