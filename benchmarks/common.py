@@ -1,9 +1,17 @@
 """Shared benchmark utilities: wall-clock timing of jitted callables on CPU
 plus TPU-v5e cost MODELS derived from compiled HLO (this container has no
 TPU; kernel-level tables report measured CPU latency ratios AND the
-bytes-moved model that predicts the TPU ratio — see EXPERIMENTS.md)."""
+bytes-moved model that predicts the TPU ratio — see EXPERIMENTS.md).
+
+Result emission is unified through ``emit``: every result prints the legacy
+``name,value,derived`` CSV line AND (when REPRO_BENCH_JSONL names a file)
+appends ONE structured 'bench' record per result — name, value, units, and
+whether the number is a cost-model prediction or a measurement — which
+`python -m repro.obs.report` renders alongside train/serve telemetry."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -37,5 +45,16 @@ def bytes_of(compiled) -> float:
     return float(compiled.cost_analysis().get("bytes accessed", 0.0))
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         units: str = "us", kind: str = "measured"):
+    """One benchmark result.  Positional args keep the legacy CSV contract
+    (`name,value,derived`); `units` and `kind` ('measured' CPU wall clock vs
+    'model' analytic/HLO-derived prediction) land in the JSONL record."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    path = os.environ.get("REPRO_BENCH_JSONL")
+    if path:
+        rec = {"t": time.time(), "kind": "bench", "name": name,
+               "value": float(us_per_call), "units": units,
+               "source": kind, "derived": derived}
+        with open(path, "a") as f:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")

@@ -113,7 +113,8 @@ def run(devices: int = 8, arch: str = "qwen15_05b", steps: int = 2,
          f"end_to_end_grad_ratio={ratio_e2e:.2f}x;"
          f"zero1_param_allgather_B={gather:.0f};"
          f"buckets={len(layout.buckets)};fp8_elems={n_fp8};"
-         f"sens_elems={n_sens};a2a_ops={n_a2a}")
+         f"sens_elems={n_sens};a2a_ops={n_a2a}",
+         units="bytes", kind="model")
     if P > 1:
         assert ratio_bucket >= 3.0, \
             f"FP8 bucket path only {ratio_bucket:.2f}x below bf16 (< 3x)"
@@ -161,7 +162,8 @@ def run(devices: int = 8, arch: str = "qwen15_05b", steps: int = 2,
              f"stream_exposed_us={exposed_stream:.1f};"
              f"hidden_us={exposed_posthoc - exposed_stream:.1f};"
              f"buckets={len(layout_s.buckets)};a2a_ops={n_a2a_s};"
-             f"jaxpr_interleaved={interleaved}")
+             f"jaxpr_interleaved={interleaved}",
+             units="us", kind="model")
         assert exposed_stream <= exposed_posthoc + 1e-9
 
     if dry_run:
@@ -182,7 +184,8 @@ def run(devices: int = 8, arch: str = "qwen15_05b", steps: int = 2,
         with mesh:
             us = time_fn(lambda s, b: fn(s, b)[1]["loss"], st, batch,
                          iters=steps, warmup=1)
-        emit(f"dp_comm_ab_step_{wire}_p{P}", us, "cpu_wall_us_per_step")
+        emit(f"dp_comm_ab_step_{wire}_p{P}", us, "cpu_wall_us_per_step",
+             units="us", kind="measured")
 
 
 def main():

@@ -116,10 +116,12 @@ def run(arch: str = "qwen15_05b", steps: int = 5, dry_run: bool = False):
                 return metrics["loss"]
 
             times[name] = time_fn(one, iters=steps, warmup=2)
-            emit(f"train_step_{name}", times[name], f"arch={arch}")
+            emit(f"train_step_{name}", times[name], f"arch={arch}",
+                 units="us", kind="measured")
     ovh = (times["guarded"] / times["unguarded"] - 1.0) * 100.0
     emit("guard_overhead", times["guarded"] - times["unguarded"],
-         f"overhead_pct={ovh:.2f}")
+         f"overhead_pct={ovh:.2f}",
+         units="us", kind="measured")
     print(f"[guard_ab] guard overhead: {ovh:+.2f}% wall-clock")
 
 

@@ -95,7 +95,8 @@ def run(dry_run: bool = False):
         padded, masked, ratio = modeled_tile_ratio(loads, C)
         emit(f"masked_moe_flops_{kind}", 0.0,
              f"padded_rows={padded:.0f};masked_rows={masked:.0f};"
-             f"modeled_flop_saving={ratio:.2f}x")
+             f"modeled_flop_saving={ratio:.2f}x",
+             units="rows", kind="model")
         if kind == "skew4":
             assert ratio >= 1.5, (
                 f"masked layout must model >=1.5x FLOP saving at 4:1 skew, "
@@ -106,7 +107,8 @@ def run(dry_run: bool = False):
          f"unfused_model_us={hbm_model_us(unfused_b):.1f};"
          f"fused_model_us={hbm_model_us(fused_b):.1f};"
          f"h_bytes_saved={unfused_b - fused_b:.0f};"
-         f"tpu_model_speedup={unfused_b / fused_b:.2f}x")
+         f"tpu_model_speedup={unfused_b / fused_b:.2f}x",
+         units="us", kind="model")
 
     # bitwise parity smoke on a real (interpret-mode) kernel invocation:
     # skewed counts incl. an empty expert, dead dispatch slots zeroed.
@@ -126,7 +128,8 @@ def run(dry_run: bool = False):
         "masked kernel diverged from padded on zero-padded dispatch buffer"
     emit("masked_moe_parity_smoke", 0.0,
          f"bitwise_equal=True;E={Es};C={Cs};"
-         f"masked_m={[int(v) for v in np.asarray(mm)]}")
+         f"masked_m={[int(v) for v in np.asarray(mm)]}",
+         units="bool", kind="measured")
     if dry_run:
         print(f"masked_moe_ab: dry-run OK (4:1-skew modeled saving "
               f"{ratio_at('skew4', E, C):.2f}x >= 1.5x; parity smoke bitwise)")
@@ -144,7 +147,8 @@ def run(dry_run: bool = False):
                    iters=3, warmup=1)
     _, _, r_small = modeled_tile_ratio(np.asarray(mm_t), Ct)
     emit("masked_moe_gemm_skew4_cpu", us_m,
-         f"padded_us={us_p:.1f};modeled_tpu_saving={r_small:.2f}x")
+         f"padded_us={us_p:.1f};modeled_tpu_saving={r_small:.2f}x",
+         units="us", kind="measured")
 
 
 def ratio_at(kind: str, E: int, C: int) -> float:

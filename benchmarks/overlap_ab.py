@@ -149,7 +149,8 @@ def run(devices: int = 2, tokens: int = 512, d_model: int = 256,
              f"sync_exposed_us={sync_us:.1f};overlap_exposed_us={ovl_us:.1f};"
              f"speedup={sync_us / ovl_us:.2f}x;"
              f"a2a_ops_sync={n_sync};a2a_ops_overlapped={n_ovl};"
-             f"launches_per_dispatch=1(vs 3)")
+             f"launches_per_dispatch=1(vs 3)",
+             units="us", kind="model")
     if dry_run:
         print("overlap_ab: dry-run OK (lowered sync + overlapped on "
               f"{devices} devices; exposed-comm model strictly better)")

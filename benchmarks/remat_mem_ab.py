@@ -69,12 +69,14 @@ def run(arch: str = "qwen3_moe_235b", batch: int = 4, seq: int = 128,
         emit(f"remat_mem_{arch}_{pol}", float(act_bytes[pol]),
              f"saved_act_B={act_bytes[pol]};fp8_B={cls['fp8']};"
              f"scale_B={cls['scale']};wide_bf16_B={cls['wide_bf16']};"
-             f"small_B={cls['small']};model_B={model:.0f}")
+             f"small_B={cls['small']};model_B={model:.0f}",
+             units="bytes", kind="measured")
 
     ratio = act_bytes["full"] / max(act_bytes["fp8_resident"], 1)
     emit(f"remat_mem_ratio_{arch}", ratio,
          f"full_B={act_bytes['full']};fp8_resident_B="
-         f"{act_bytes['fp8_resident']};gate=3.0x")
+         f"{act_bytes['fp8_resident']};gate=3.0x",
+         units="ratio", kind="measured")
     assert ratio >= 3.0, \
         f"fp8_resident saves only {ratio:.2f}x fewer activation bytes " \
         f"than full bf16 remat (< 3x gate)"
@@ -109,7 +111,8 @@ def run(arch: str = "qwen3_moe_235b", batch: int = 4, seq: int = 128,
         remat_sites[name] = jx.count("remat2[")
         emit(f"remat_compile_{name}_d{d}", trace_us[name],
              f"trace_lower_us={trace_us[name]:.0f};"
-             f"remat_sites={remat_sites[name]}")
+             f"remat_sites={remat_sites[name]}",
+             units="us", kind="measured")
     # pair halves the unrolled trace sites (the ROADMAP follow-on's point)
     assert remat_sites["pair"] <= remat_sites["unrolled"] // 2 + 1, \
         remat_sites
@@ -142,7 +145,8 @@ def run(arch: str = "qwen3_moe_235b", batch: int = 4, seq: int = 128,
             losses[pol] = np.array(ls)
             emit(f"remat_parity_{pol}", float(losses[pol][-1]),
                  f"loss_first={losses[pol][0]:.5f};"
-                 f"loss_last={losses[pol][-1]:.5f}")
+                 f"loss_last={losses[pol][-1]:.5f}",
+                 units="loss", kind="measured")
         ref = losses["none"]
         for pol in POLICIES:
             rel = np.max(np.abs(losses[pol] - ref) / np.abs(ref))

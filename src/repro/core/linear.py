@@ -517,6 +517,6 @@ def dense_mlp(recipe: Recipe, act: str, x, w13, w2):
                           w13_3, w2_3)[0][:T, :D]
     # fp8_flow: quantize once at entry, FP8-native pathway end to end
     qx = quantize_entry(recipe, x3)
-    record_entry_stats("q_entry", x3, qx)
+    record_entry_stats("q_entry_mlp", x3, qx)
     y = expert_ffn(recipe, act, (), (), qx, w13_3, w2_3)
     return y[0][:T, :D]

@@ -38,6 +38,7 @@ from repro.core.quant import (QTensor, _dequantize_nocount, quantize_rowwise,
                               record_entry_stats,
                               tag_saveable)
 from repro.core.recipes import Recipe
+from repro.obs.trace import stage_annotation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,59 +282,65 @@ def moe_block(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2):
     # and MXU tiles); bf16 only needs sublane alignment.
     C_exp = _round_up(max(R // E_loc, 8), 128 if recipe.is_fp8 else 8)
 
-    p, ids, aux = router_topk(x, w_router, k)
-    row_map_send, slot_expert, slot_assign, drop_frac = _dispatch_plan(
-        ids, k, EP, E_loc, C_send)
+    with stage_annotation("router"):
+        p, ids, aux = router_topk(x, w_router, k)
+        row_map_send, slot_expert, slot_assign, drop_frac = _dispatch_plan(
+            ids, k, EP, E_loc, C_send)
 
     # ---- dispatch ----------------------------------------------------------
-    if recipe.name == "fp8_flow":
-        q_send = dispatch_quantize(recipe, x, row_map_send, T)
-        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
-        d = _a2a(q_send.data, cfg.ep_axis)
-        s = _a2a(q_send.scale, cfg.ep_axis)
-        q_recv = QTensor(d, s, q_send.tile)
-        recv_in = q_recv
-    elif recipe.name == "naive_fp8":
-        recv_in = fp8_dispatch_naive(recipe, x, row_map_send, T, cfg.ep_axis)
-    else:  # bf16 / blockwise: BF16 dispatch
-        x_send = _take_rows(x.astype(jnp.bfloat16), row_map_send)
-        recv_in = _a2a(x_send, cfg.ep_axis)
+    with stage_annotation("dispatch"):
+        if recipe.name == "fp8_flow":
+            q_send = dispatch_quantize(recipe, x, row_map_send, T)
+            record_entry_stats("q_entry_moe", x, scale_mode=recipe.scale_mode)
+            d = _a2a(q_send.data, cfg.ep_axis)
+            s = _a2a(q_send.scale, cfg.ep_axis)
+            q_recv = QTensor(d, s, q_send.tile)
+            recv_in = q_recv
+        elif recipe.name == "naive_fp8":
+            recv_in = fp8_dispatch_naive(recipe, x, row_map_send, T,
+                                         cfg.ep_axis)
+        else:  # bf16 / blockwise: BF16 dispatch
+            x_send = _take_rows(x.astype(jnp.bfloat16), row_map_send)
+            recv_in = _a2a(x_send, cfg.ep_axis)
 
-    # metadata rides int32/f32 all-to-alls (ids are sent alongside payloads;
-    # DeepEP packs them into the same message — we count their bytes too)
-    recv_expert = _a2a(slot_expert, cfg.ep_axis)
-    p_flat = jnp.where(slot_assign >= 0,
-                       p.reshape(-1)[jnp.maximum(slot_assign, 0)], 0.0)
-    recv_p = _a2a(p_flat, cfg.ep_axis)
+        # metadata rides int32/f32 all-to-alls (ids are sent alongside
+        # payloads; DeepEP packs them into the same message — we count their
+        # bytes too)
+        recv_expert = _a2a(slot_expert, cfg.ep_axis)
+        p_flat = jnp.where(slot_assign >= 0,
+                           p.reshape(-1)[jnp.maximum(slot_assign, 0)], 0.0)
+        recv_p = _a2a(p_flat, cfg.ep_axis)
 
     # ---- expert grouping (fused permute+pad #2) ----------------------------
-    row_map_exp, ret_map = _expert_plan(recv_expert, E_loc, C_exp)
-    if recipe.name == "fp8_flow":
-        q_exp = permute_q(recipe, recv_in, row_map_exp, ret_map)
-        ffn_in = QTensor(q_exp.data.reshape(E_loc, C_exp, D),
-                         q_exp.scale.reshape(E_loc, C_exp, D // TILE),
-                         (1, 1, TILE))
-    else:
-        x_exp = _take_rows(recv_in, row_map_exp)
-        ffn_in = x_exp.reshape(E_loc, C_exp, D)
+    with stage_annotation("expert"):
+        row_map_exp, ret_map = _expert_plan(recv_expert, E_loc, C_exp)
+        if recipe.name == "fp8_flow":
+            q_exp = permute_q(recipe, recv_in, row_map_exp, ret_map)
+            ffn_in = QTensor(q_exp.data.reshape(E_loc, C_exp, D),
+                             q_exp.scale.reshape(E_loc, C_exp, D // TILE),
+                             (1, 1, TILE))
+        else:
+            x_exp = _take_rows(recv_in, row_map_exp)
+            ffn_in = x_exp.reshape(E_loc, C_exp, D)
 
-    # ---- grouped expert FFN (the recipe heart) -----------------------------
-    masked_m = _masked_m_or_none(recipe, row_map_exp, E_loc, C_exp)
-    y_exp = tag_saveable(
-        expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2,
-                   masked_m),
-        "stage_expert_out")
+        # ---- grouped expert FFN (the recipe heart) -------------------------
+        masked_m = _masked_m_or_none(recipe, row_map_exp, E_loc, C_exp)
+        y_exp = tag_saveable(
+            expert_ffn(recipe, cfg.act, cfg.dp_axes, (), ffn_in, w13, w2,
+                       masked_m),
+            "stage_expert_out")
 
-    # expert-side prob weighting (grad wrt p flows through this product)
-    p_exp = _take_rows(recv_p[:, None], row_map_exp).reshape(E_loc, C_exp)
-    y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
+        # expert-side prob weighting (grad wrt p flows through this product)
+        p_exp = _take_rows(recv_p[:, None], row_map_exp).reshape(E_loc, C_exp)
+        y_exp = y_exp * p_exp[..., None].astype(y_exp.dtype)
 
     # ---- return + combine (BF16 by design: top-k reduction) ----------------
-    y_ret = _take_rows(y_exp.reshape(E_loc * C_exp, D), ret_map)
-    y_back = _a2a(y_ret, cfg.ep_axis)                        # (R, D) bf16
-    seg = jnp.where(row_map_send >= 0, row_map_send, T)
-    y = jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
-                            num_segments=T + 1)[:T]
+    with stage_annotation("combine"):
+        y_ret = _take_rows(y_exp.reshape(E_loc * C_exp, D), ret_map)
+        y_back = _a2a(y_ret, cfg.ep_axis)                    # (R, D) bf16
+        seg = jnp.where(row_map_send >= 0, row_map_send, T)
+        y = jax.ops.segment_sum(y_back.astype(jnp.float32), seg,
+                                num_segments=T + 1)[:T]
     metrics = {"aux_loss": aux, "drop_frac": drop_frac}
     return y.astype(x.dtype), metrics
 
@@ -375,7 +382,7 @@ def moe_block_tp(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
 
     if recipe.name == "fp8_flow":
         q_exp = dispatch_quantize(recipe, x, tok_of_slot, T)
-        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
+        record_entry_stats("q_entry_moe", x, scale_mode=recipe.scale_mode)
         ffn_in = QTensor(q_exp.data.reshape(E, C_exp, D),
                          q_exp.scale.reshape(E, C_exp, D // TILE), (1, 1, TILE))
     else:
@@ -495,16 +502,19 @@ def _decode_pipeline(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
     Tc = T // n
     C_dec = _round_up(max(int(2.0 * Tc * k / cfg.n_experts), 8), 8)
 
-    p, aux, local_e, xq = decode_stage_router(recipe, cfg, x, w_router, r,
-                                              E_loc)
+    with stage_annotation("router"):
+        p, aux, local_e, xq = decode_stage_router(recipe, cfg, x, w_router,
+                                                  r, E_loc)
 
     def partial(c):
         le = jax.lax.slice_in_dim(local_e, c * Tc * k, (c + 1) * Tc * k)
-        ffn_in, rme, tok_loc, nv, nk = decode_stage_dispatch(
-            recipe, cfg, xq, le, c * Tc, E_loc, C_dec)
+        with stage_annotation("dispatch"):
+            ffn_in, rme, tok_loc, nv, nk = decode_stage_dispatch(
+                recipe, cfg, xq, le, c * Tc, E_loc, C_dec)
         pc = jax.lax.slice_in_dim(p, c * Tc, (c + 1) * Tc)
-        y_loc = decode_stage_expert(recipe, cfg, ffn_in, w13, w2, pc, rme,
-                                    tok_loc, Tc)
+        with stage_annotation("expert"):
+            y_loc = decode_stage_expert(recipe, cfg, ffn_in, w13, w2, pc,
+                                        rme, tok_loc, Tc)
         return y_loc, nv - nk
 
     ys = []
@@ -512,11 +522,13 @@ def _decode_pipeline(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
     for c in range(1, n):
         # stage 'combine' of chunk c-1 rides the wire while chunk c's
         # dispatch + expert stages (traced next, independent of it) compute
-        y_prev = jax.lax.psum(pend_y, cfg.ep_axis)
+        with stage_annotation("combine"):
+            y_prev = jax.lax.psum(pend_y, cfg.ep_axis)
         pend_y, d_c = partial(c)
         ys.append(y_prev)
         drops = drops + d_c
-    ys.append(jax.lax.psum(pend_y, cfg.ep_axis))
+    with stage_annotation("combine"):
+        ys.append(jax.lax.psum(pend_y, cfg.ep_axis))
     # real drop accounting: each assignment is local to exactly one rank, so
     # the ones that did not get an expert slot (C_dec overflow) are the
     # drops; summed over the EP group against the global count T*k.
@@ -663,7 +675,7 @@ def moe_block_overlapped(recipe: Recipe, cfg: MoEConfig, x, w_router, w13, w2,
     n = DispatchPlan(n_chunks=n_chunks, min_chunk_tokens=1).chunks_for(T)
     p, ids, aux = router_topk(x, w_router, cfg.top_k)
     if recipe.name == "fp8_flow":
-        record_entry_stats("q_entry", x, scale_mode=recipe.scale_mode)
+        record_entry_stats("q_entry_moe", x, scale_mode=recipe.scale_mode)
         y, drop = _overlap_core_flow(recipe, cfg, n, x, p, ids, w13, w2)
     else:
         y, drop = _overlap_chunks_autodiff(recipe, cfg, n, x, p, ids, w13, w2)

@@ -117,8 +117,10 @@ def tag_qtensor(q: "QTensor", name: str) -> "QTensor":
 # FP8 health stats for the numerics guardrails (train/guards.py).
 #
 # When a collector is armed (train_step traces under `collect_stats()`),
-# the instrumented sites record a (2,) f32 vector [saturation fraction,
-# underflow-flush fraction] of their tensor.  The recorded values are
+# the instrumented sites record a (N_SITES, 2) f32 matrix — their row is
+# [saturation fraction, underflow-flush fraction] of their tensor, every
+# other row zero; max-merge keeps per-site resolution.  The recorded
+# values are
 # TRACERS, and recording must happen in a trace region that can hand them
 # back out: any enclosing lax.scan body / jax.checkpoint block / shard_map
 # body drains its own records into an explicit output before returning
@@ -137,7 +139,21 @@ def tag_qtensor(q: "QTensor", name: str) -> "QTensor":
 # ZERO ops — the default jaxpr is bitwise-unchanged.
 # ---------------------------------------------------------------------------
 STATS_LEN = 2                      # [sat_frac, flush_frac], max-merged
-STATS_TAGS = frozenset({"q_entry", "dp_wire"})
+# Instrumented quantize sites, one row of the collected matrix each.  The
+# collected value is a (N_SITES, STATS_LEN) f32 matrix — PR 7 carried a
+# single max-merged (2,) vector; the per-site rows ride the SAME carries
+# (every drain/reinject threading point is shape-generic), so site
+# resolution costs no extra threading and no extra host syncs.  The scalar
+# guard thresholds keep their old meaning as the max over sites, while the
+# obs layer exports the full matrix as a per-site time series (the input
+# the ROADMAP's guard-driven adaptive precision controller needs).
+STAT_SITES = ("q_entry_mlp",       # dense-MLP / shared-expert entry quantize
+              "q_entry_moe",       # MoE dispatch entry quantize
+              "dp_wire")           # DP gradient-wire bucket quantize
+N_SITES = len(STAT_SITES)
+_SITE_ROW = {t: i for i, t in enumerate(STAT_SITES)}
+_SITE_ROW["q_entry"] = 0           # legacy alias (pre-split call sites)
+STATS_TAGS = frozenset(_SITE_ROW)
 
 _QSTATS: contextvars.ContextVar[Optional["QuantStatsCollector"]] = \
     contextvars.ContextVar("quant_stats", default=None)
@@ -153,14 +169,22 @@ def stats_armed() -> bool:
 
 
 def zero_stats() -> jax.Array:
-    return jnp.zeros((STATS_LEN,), jnp.float32)
+    return jnp.zeros((N_SITES, STATS_LEN), jnp.float32)
 
 
-def record_stat_pair(sat_frac, flush_frac) -> None:
+def site_maxima(stats: jax.Array) -> jax.Array:
+    """(N_SITES, STATS_LEN) -> (STATS_LEN,) max over sites — the scalar
+    [sat_frac, flush_frac] pair the guard thresholds compare against
+    (identical to the pre-per-site collector's merged value)."""
+    return jnp.max(jnp.asarray(stats, jnp.float32), axis=0)
+
+
+def record_stat_pair(tag: str, sat_frac, flush_frac) -> None:
     col = _QSTATS.get()
     if col is not None:
-        col.vals.append(jnp.stack([jnp.asarray(sat_frac, jnp.float32),
-                                   jnp.asarray(flush_frac, jnp.float32)]))
+        pair = jnp.stack([jnp.asarray(sat_frac, jnp.float32),
+                          jnp.asarray(flush_frac, jnp.float32)])
+        col.vals.append(zero_stats().at[_SITE_ROW[tag]].set(pair))
 
 
 def drain_stats() -> jax.Array:
@@ -205,7 +229,7 @@ def _maybe_record_stats(tag: str, xf, data, fmax: float) -> None:
     sat = jnp.mean((xa > fmax).astype(jnp.float32))
     flush = jnp.mean(((data.astype(jnp.float32) == 0) & (xa > 0)
                       ).astype(jnp.float32))
-    record_stat_pair(sat, flush)
+    record_stat_pair(tag, sat, flush)
 
 
 def record_entry_stats(tag: str, x, q: Optional["QTensor"] = None,

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import casts
 from repro.core.fp8 import E4M3, E4M3_MAX, TILE
 from repro.dist import scale_sync
+from repro.obs.trace import annotate
 
 _E4M3_BYTES = 1
 _EXP_BYTES = 1
@@ -84,6 +85,12 @@ def reduce_scatter_bucket(flat: jax.Array, axis_name, n_shards: int,
     rows = flat.shape[0]
     assert rows % n_shards == 0, (rows, n_shards)
 
+    with annotate(f"wire/rs_bucket_{wire}"):
+        return _reduce_scatter_bucket(flat, axis_name, n_shards, wire, guard)
+
+
+def _reduce_scatter_bucket(flat, axis_name, n_shards, wire, guard):
+    rows = flat.shape[0]
     if wire == "fp8":
         payload, exp = quantize_bucket(flat, axis_name)
         msg = pack_bucket(payload, exp).reshape(n_shards, rows // n_shards,
@@ -141,11 +148,12 @@ def reduce_sensitive(g: jax.Array, axis_name, n_shards: int,
                      wire: str) -> jax.Array:
     """bf16-fallback reduction for sensitive leaves: cast to the fallback
     wire dtype, psum, mean.  f32 wire keeps full precision (baseline)."""
-    wdtype = jnp.float32 if wire == "f32" else jnp.bfloat16
-    gw = g.astype(wdtype)
-    if axis_name is not None and n_shards > 1:
-        gw = jax.lax.psum(gw, axis_name)
-    return gw.astype(jnp.float32) / n_shards
+    with annotate("wire/sensitive_psum"):
+        wdtype = jnp.float32 if wire == "f32" else jnp.bfloat16
+        gw = g.astype(wdtype)
+        if axis_name is not None and n_shards > 1:
+            gw = jax.lax.psum(gw, axis_name)
+        return gw.astype(jnp.float32) / n_shards
 
 
 # ---------------------------------------------------------------------------

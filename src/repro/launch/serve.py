@@ -43,6 +43,14 @@ def main():
     ap.add_argument("--no-w8", action="store_true")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="write structured serve telemetry (per-tick "
+                         "records, request_done events with TTFT/TBT, "
+                         "KV-pool occupancy) as JSONL for "
+                         "`python -m repro.obs.report`")
+    ap.add_argument("--obs-prom", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the serve metrics registry at exit")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -64,7 +72,13 @@ def main():
         prefill_chunk=args.prefill_chunk,
         fp8_kv=fp8 and not args.bf16_kv,
         w8_weights=fp8 and not args.no_w8, seed=args.seed)
-    engine = ServeEngine(cfg, recipe, plan, params, ecfg)
+    from repro.obs.sink import JsonlSink, Telemetry, null_telemetry
+    if args.obs_jsonl is not None or args.obs_prom is not None:
+        sinks = (JsonlSink(args.obs_jsonl),) if args.obs_jsonl else ()
+        tel = Telemetry(sinks=sinks)
+    else:
+        tel = null_telemetry()
+    engine = ServeEngine(cfg, recipe, plan, params, ecfg, telemetry=tel)
     print(f"[serve] {args.arch} recipe={recipe.name} "
           f"kv={'fp8' if ecfg.fp8_kv else 'bf16'} "
           f"w8={ecfg.w8_weights} pool={engine.kv_bytes()/2**20:.1f} MiB")
@@ -82,6 +96,19 @@ def main():
     print(f"[serve] {len(results)}/{args.requests} requests, {n_tok} tokens "
           f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s), "
           f"max concurrent {engine.max_concurrent}")
+    s = results.stats
+    print(f"[serve] ticks={s['ticks']} admitted={s['admitted']} "
+          f"evicted={s['evicted']} finished={s['finished']} "
+          f"prefill_chunks={s['prefill_chunks']} "
+          f"decode_tokens={s['decode_tokens']}")
+    if args.obs_prom is not None:
+        tel.write_prometheus(args.obs_prom)
+        print(f"[serve] wrote metrics snapshot to {args.obs_prom}")
+    if args.obs_jsonl is not None:
+        tel.emit_registry()
+        tel.close()
+        print(f"[serve] wrote telemetry to {args.obs_jsonl} "
+              f"(report: python -m repro.obs.report {args.obs_jsonl})")
 
 
 if __name__ == "__main__":

@@ -100,7 +100,22 @@ def main():
     ap.add_argument("--guard-demote-steps", type=int, default=8,
                     help="length of the bf16 fallback window entered after "
                          "persistent anomalies")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="write structured telemetry (typed loop events, "
+                         "per-step samples with per-site FP8 sat/flush, "
+                         "cast-ledger snapshots) as JSONL; feed the file to "
+                         "`python -m repro.obs.report`")
+    ap.add_argument("--obs-prom", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the metrics registry at exit")
     args = ap.parse_args()
+
+    from repro.obs.sink import JsonlSink, Telemetry, null_telemetry
+    if args.obs_jsonl is not None or args.obs_prom is not None:
+        sinks = (JsonlSink(args.obs_jsonl),) if args.obs_jsonl else ()
+        tel = Telemetry(sinks=sinks)
+    else:
+        tel = null_telemetry()
 
     dist = DistPlan(wire=args.dist_wire, schedule=args.dist_schedule) \
         if args.dist_wire != "off" else None
@@ -142,6 +157,21 @@ def main():
         if args.guard else None
     state = init_train_state(cfg, opt, jax.random.key(0), dist=dist,
                              guard=guard)
+    if dist is not None:
+        # static wire accounting: one layout event + a modelled bytes/step
+        # counter the loop increments every step
+        from repro.dist import build_layout
+        layout = build_layout(state["params"], dist)
+        n_dp = mesh.shape[dist.axis]
+        gbytes = wire_grad_bytes(cfg.n_params(), n_dp, dist.wire)
+        tel.record("wire_layout", wire=dist.wire, schedule=dist.schedule,
+                   n_dp=n_dp, n_buckets=len(layout.buckets),
+                   n_sensitive=len(layout.sensitive),
+                   n_leaves=layout.n_leaves, fp8_elems=layout.fp8_elems,
+                   wire_rows=layout.wire_rows,
+                   grad_bytes_per_step=gbytes)
+        tel.per_step_counters["wire_grad_bytes_total"] = gbytes
+        tel.per_step_counters["wire_buckets_total"] = len(layout.buckets)
     if dist is not None and dist.schedule == "stream":
         # fast clear fallback: if the layout's buckets cannot align to layer
         # boundaries (or the config cannot stream), warn and run post-hoc —
@@ -191,9 +221,23 @@ def main():
                                grad_accum=args.grad_accum,
                                ckpt_dir=args.ckpt_dir, elastic=elastic,
                                restore_shardings=restore_sh,
-                               guard_policy=policy, fallback_step=fallback)
+                               guard_policy=policy, fallback_step=fallback,
+                               telemetry=tel)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
           f"{hist[-1]['loss']:.4f}")
+    dev_ms = [h["device_ms"] for h in hist]
+    fetch_ms = [h["fetch_ms"] for h in hist]
+    print(f"[train] timing: device {sum(dev_ms)/len(dev_ms):.1f}ms/step, "
+          f"host fetch {sum(fetch_ms)/len(fetch_ms):.1f}ms/step "
+          f"({len(hist)} steps)")
+    if args.obs_prom is not None:
+        tel.write_prometheus(args.obs_prom)
+        print(f"[train] wrote metrics snapshot to {args.obs_prom}")
+    if args.obs_jsonl is not None:
+        tel.emit_registry()
+        tel.close()
+        print(f"[train] wrote telemetry to {args.obs_jsonl} "
+              f"(report: python -m repro.obs.report {args.obs_jsonl})")
 
 
 if __name__ == "__main__":

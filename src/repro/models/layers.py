@@ -334,11 +334,14 @@ def stage_ln_attn(cfg, p, x, *, positions, layer_window=0, cache=None,
     stage output is checkpoint_name-tagged so the MemoryPlan 'full' policy
     (train/memory.py) can keep the bf16 stage boundary resident."""
     from repro.core.quant import tag_saveable
-    h = apply_norm(cfg.norm, x, p, "ln1")
-    out, new_cache = attn_block(cfg, p, h, positions=positions,
-                                layer_window=layer_window, cache=cache,
-                                cache_pos=cache_pos, causal=causal, plan=plan)
-    return tag_saveable(x + out, "stage_attn_out"), new_cache
+    from repro.obs.trace import stage_annotation
+    with stage_annotation("attn"):
+        h = apply_norm(cfg.norm, x, p, "ln1")
+        out, new_cache = attn_block(cfg, p, h, positions=positions,
+                                    layer_window=layer_window, cache=cache,
+                                    cache_pos=cache_pos, causal=causal,
+                                    plan=plan)
+        return tag_saveable(x + out, "stage_attn_out"), new_cache
 
 
 def attn_block(cfg, p, x, *, positions, layer_window=0, cache=None,

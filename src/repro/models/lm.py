@@ -302,7 +302,7 @@ def _dense_mlp_sharded(recipe, act, plan, xf, w13_l, w2_l, *, tp: bool):
         wg_axes, gx_axes = dp + (plan.tp_axis,), ()
     if recipe.name == "fp8_flow":
         qx = quantize_entry(recipe, x3)
-        quant_stats.record_entry_stats("q_entry", x3, qx)
+        quant_stats.record_entry_stats("q_entry_mlp", x3, qx)
         y = expert_ffn(recipe, act, wg_axes, gx_axes, qx, w13_l[None],
                        w2_l[None])
     else:
@@ -555,7 +555,11 @@ def _sub_layer(cfg, recipe, plan, kind, moe_layer, p, x, positions,
         else:
             mlp_out, aux = _moe_stage(cfg, recipe, plan, p, h2)
     else:
-        mlp_out = _mlp_stage(cfg, recipe, plan, p, h2)
+        # dense layers have no router/dispatch/combine; the whole FFN is
+        # one 'expert' stage so profiles line up across layer kinds
+        from repro.obs.trace import stage_annotation
+        with stage_annotation("expert"):
+            mlp_out = _mlp_stage(cfg, recipe, plan, p, h2)
     out = x + mlp_out
     out = _residual_constraint(plan, out, decode=cache is not None
                                or ssm_state is not None)
@@ -825,10 +829,12 @@ def forward(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan, params,
     metrics = {"aux_loss": aux_total}
     if quant_stats.stats_armed():
         # final drain: every stack driver reinjected its threaded stats at
-        # this level, so the merged vector exits value_and_grad via has_aux
+        # this level, so the merged matrix exits value_and_grad via has_aux
         sv = quant_stats.drain_stats()
-        metrics["quant_sat_frac"] = sv[0]
-        metrics["quant_flush_frac"] = sv[1]
+        sm = quant_stats.site_maxima(sv)
+        metrics["quant_sat_frac"] = sm[0]
+        metrics["quant_flush_frac"] = sm[1]
+        metrics["quant_site_stats"] = sv
     if not compute_loss:
         return logits, metrics
     mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))

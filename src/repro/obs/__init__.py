@@ -1,0 +1,38 @@
+"""Unified telemetry: zero-sync metrics registry, structured sinks, and
+stage-level tracing shared by the train loop, the serving engine, and the
+benchmark suite.
+
+Design split (the same jit-boundary discipline as train/guards.py):
+
+  on-device  everything worth observing inside the step is ALREADY an
+             output of the jitted program — the metrics dict train_step
+             returns (loss, grad_norm, guard_flags, the per-site FP8
+             sat/flush matrix) and the serve step's sampled tokens.  The
+             obs layer never adds a device->host transfer: it consumes the
+             per-step fetch the loop was doing anyway (asserted the same
+             way benchmarks/guard_overhead_ab.py asserts the guard
+             bitmask's zero-sync contract).
+  on-host    the registry (obs/metrics.py) aggregates those fetched values
+             into counters/gauges/po2-bucket histograms; sinks
+             (obs/sink.py) stream typed events + metric samples to JSONL /
+             an in-memory ring / a Prometheus text snapshot; the reporter
+             (obs/report.py, `python -m repro.obs.report run.jsonl`)
+             renders step-time breakdowns, guard timelines, and per-site
+             numerics summaries after the fact.
+
+Device-side *tracing* (obs/trace.py) is trace-time only: jax.named_scope
+annotations on the staged layer program (attn -> router -> dispatch ->
+expert -> combine), the streaming-wire bucket issue points, and the
+MemoryPlan remat blocks — zero ops, they only name the HLO.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               po2_buckets)
+from repro.obs.sink import (JsonlSink, MemorySink, MultiSink, NullSink,
+                            Telemetry, null_telemetry)
+from repro.obs.trace import Span, annotate, stage_annotation
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "po2_buckets",
+    "JsonlSink", "MemorySink", "MultiSink", "NullSink", "Telemetry",
+    "null_telemetry", "Span", "annotate", "stage_annotation",
+]

@@ -49,9 +49,25 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.recipes import Recipe
 from repro.models.lm import (ParallelPlan, paged_decode_step, paged_prefill)
+from repro.obs.metrics import po2_buckets
+from repro.obs.sink import null_telemetry
 from repro.serve.paged_kv import (PageAllocator, init_paged_cache,
                                   pool_nbytes)
 from repro.serve.scheduler import Request, RequestState, Scheduler
+
+# latency histogram edges: 2^-4 .. 2^14 ms covers sub-ms decode ticks
+# through multi-second saturated TTFTs
+_LAT_BUCKETS = po2_buckets(-4, 14)
+
+
+class TraceResults(dict):
+    """run()'s return value: the rid -> per-request result dict it always
+    was, plus `.stats` (run-level aggregate counters)."""
+    stats: dict
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.stats = {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,8 +151,9 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
-                 params, ecfg: ServeConfig = ServeConfig()):
+                 params, ecfg: ServeConfig = ServeConfig(), telemetry=None):
         self.cfg, self.recipe, self.plan, self.ecfg = cfg, recipe, plan, ecfg
+        self.tel = telemetry if telemetry is not None else null_telemetry()
         if ecfg.prefill_chunk is not None and (
                 ecfg.prefill_chunk < 1
                 or ecfg.prefill_chunk > max(ecfg.prefill_buckets)):
@@ -156,24 +173,34 @@ class ServeEngine:
         self._tick_count = 0
         self.max_concurrent = 0
         self.total_decoded = 0
+        self.n_rejected = 0
+        self.n_prefill_chunks = 0
 
     # -- queue -------------------------------------------------------------
+    def _reject(self, req: Request, msg: str):
+        """A request that can NEVER be served is dropped (counted) and the
+        caller gets the ValueError it always did."""
+        self.n_rejected += 1
+        self.tel.counter("serve_rejected_total").inc()
+        self.tel.record("request_rejected", rid=req.rid, reason=msg)
+        raise ValueError(msg)
+
     def submit(self, req: Request) -> None:
         ecfg = self.ecfg
         P = len(req.prompt)
         if P < 1 or req.max_new_tokens < 1:
-            raise ValueError("empty prompt / zero max_new_tokens")
+            self._reject(req, "empty prompt / zero max_new_tokens")
         if ecfg.prefill_chunk is None and P > max(ecfg.prefill_buckets):
-            raise ValueError(f"prompt {P} exceeds the largest prefill "
-                             f"bucket {max(ecfg.prefill_buckets)} "
-                             f"(set prefill_chunk to slice long prompts)")
+            self._reject(req, f"prompt {P} exceeds the largest prefill "
+                         f"bucket {max(ecfg.prefill_buckets)} "
+                         f"(set prefill_chunk to slice long prompts)")
         if P + req.max_new_tokens > ecfg.max_len:
-            raise ValueError(f"request needs {P + req.max_new_tokens} "
-                             f"tokens > max_len {ecfg.max_len}")
+            self._reject(req, f"request needs {P + req.max_new_tokens} "
+                         f"tokens > max_len {ecfg.max_len}")
         if req.reserved_tokens > ecfg.token_budget:
-            raise ValueError("request alone exceeds the token budget")
+            self._reject(req, "request alone exceeds the token budget")
         if self.alloc.pages_for(P + req.max_new_tokens) > ecfg.n_pages - 1:
-            raise ValueError("request alone exceeds the KV pool")
+            self._reject(req, "request alone exceeds the KV pool")
         self.sched.submit(req)
 
     # -- one tick ----------------------------------------------------------
@@ -191,6 +218,9 @@ class ServeEngine:
             # worst); the too-small-pool case is rejected in submit()
             ev = self.sched.evict_youngest(self.alloc, requester=st)
             assert ev is not None
+            self.tel.counter("serve_evicted_total").inc()
+            self.tel.record("request_evicted", rid=ev.req.rid,
+                            by=st.req.rid, n_evictions=ev.n_evictions)
             if ev is st:
                 return False
         return st.slot in self.sched.active
@@ -270,6 +300,22 @@ class ServeEngine:
         self._tick_count += 1
         self.max_concurrent = max(self.max_concurrent,
                                   len(decode_slots) + (pf is not None))
+        tel = self.tel
+        tel.counter("serve_ticks_total").inc()
+        tel.counter("serve_decode_tokens_total").inc(len(decode_slots))
+        if pf is not None:
+            self.n_prefill_chunks += 1
+            tel.counter("serve_prefill_chunks_total").inc()
+        used = (ecfg.n_pages - 1) - self.alloc.free_pages
+        tel.gauge("kv_used_pages").set(used)
+        tel.histogram("kv_used_pages_hist",
+                      edges=po2_buckets(0, 20)).observe(used)
+        if tel.enabled:
+            tel.record("serve_tick", tick=self._tick_count - 1,
+                       n_decode=len(decode_slots), bucket=bucket,
+                       chunk=int(chunk), kv_used_pages=used,
+                       n_waiting=len(sched.waiting),
+                       reserved_tokens=sched.reserved_tokens)
 
         if pf is not None:
             pf.prefill_pos += chunk
@@ -293,8 +339,23 @@ class ServeEngine:
         self.total_decoded += 1
         if st.first_token_time is None:
             st.first_token_time = now
+            self.tel.histogram("serve_ttft_ms", edges=_LAT_BUCKETS).observe(
+                (now - st.req.arrival_time) * 1e3)
+        elif st.last_token_time is not None:
+            self.tel.histogram("serve_tbt_ms", edges=_LAT_BUCKETS).observe(
+                (now - st.last_token_time) * 1e3)
+        st.last_token_time = now
         if st.done(self.ecfg.eos_id):
             self.sched.finish(st.slot, self.alloc, now)
+            self.tel.counter("serve_finished_total").inc()
+            n_tok = len(st.generated)
+            ttft_ms = (st.first_token_time - st.req.arrival_time) * 1e3
+            tbt_ms_mean = ((now - st.first_token_time) * 1e3
+                           / max(n_tok - 1, 1))
+            self.tel.record("request_done", rid=st.req.rid, n_tokens=n_tok,
+                            ttft_ms=ttft_ms, tbt_ms_mean=tbt_ms_mean,
+                            wait_ms=(st.admit_time - st.req.arrival_time)
+                            * 1e3, n_evictions=st.n_evictions)
             results[st.req.rid] = {
                 "tokens": list(st.generated),
                 "arrival": st.req.arrival_time,
@@ -311,7 +372,7 @@ class ServeEngine:
         are honored against the wall clock (Poisson traces); otherwise every
         request is enqueued immediately (closed-loop saturation)."""
         pending = deque(sorted(requests, key=lambda r: r.arrival_time))
-        results: Dict[int, dict] = {}
+        results = TraceResults()
         t0 = time.perf_counter()
         idle_spins = 0
         while pending or not self.sched.idle():
@@ -331,7 +392,21 @@ class ServeEngine:
                 raise RuntimeError(
                     "scheduler deadlock: waiting requests can never be "
                     "admitted (check token_budget / n_pages)")
+        results.stats = self.stats()
+        self.tel.record("serve_summary", **results.stats)
+        self.tel.flush()
         return results
+
+    def stats(self) -> Dict[str, int]:
+        """Run-level aggregate counters (also on run()'s TraceResults.stats
+        and in the obs registry as serve_* counters)."""
+        s = self.sched.stats()
+        return {"ticks": self._tick_count, "admitted": s["admitted"],
+                "evicted": s["evicted"], "finished": s["finished"],
+                "rejected": self.n_rejected,
+                "prefill_chunks": self.n_prefill_chunks,
+                "decode_tokens": self.total_decoded,
+                "max_concurrent": self.max_concurrent}
 
     # -- reporting ---------------------------------------------------------
     def kv_bytes(self) -> int:

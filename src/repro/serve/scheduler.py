@@ -61,6 +61,7 @@ class RequestState:
     admit_time: float
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None   # TBT accounting (obs/)
     finish_time: Optional[float] = None
     prefilled: bool = False
     prefill_pos: int = 0           # tokens prefilled so far (chunked prefill:
@@ -94,6 +95,7 @@ class Scheduler:
         self._admit_seq = itertools.count()
         self.n_finished = 0
         self.n_evictions = 0
+        self.n_admitted = 0
         self._eviction_counts: Dict[int, int] = {}     # rid -> times evicted
 
     # -- introspection -----------------------------------------------------
@@ -107,6 +109,13 @@ class Scheduler:
 
     def idle(self) -> bool:
         return not self.waiting and not self.active
+
+    def stats(self) -> Dict[str, int]:
+        """Aggregate scheduler counters (the engine folds these into its
+        run-level stats and the obs registry)."""
+        return {"admitted": self.n_admitted, "evicted": self.n_evictions,
+                "finished": self.n_finished, "waiting": len(self.waiting),
+                "active": self.n_active}
 
     def mid_prefill(self) -> Optional[RequestState]:
         """The resident whose chunked prefill is still in flight, if any.
@@ -143,6 +152,7 @@ class Scheduler:
                           admit_seq=next(self._admit_seq), admit_time=now,
                           n_evictions=self._eviction_counts.get(req.rid, 0))
         self.active[slot] = st
+        self.n_admitted += 1
         return st
 
     # -- eviction / completion --------------------------------------------

@@ -146,6 +146,9 @@ class GuardPolicy:
     total: int = 0
     demoted_until: int = -1
     events: List[dict] = dataclasses.field(default_factory=list)
+    # optional obs/sink.Telemetry: the loop wires its handle in so every
+    # ladder transition also lands in the structured sinks + a counter
+    telemetry: Optional[object] = None
 
     def _event(self, log_fn: Callable, step: int, event: str, flags: int,
                **extra):
@@ -153,8 +156,13 @@ class GuardPolicy:
                "flag_names": flag_names(flags), **extra}
         self.events.append(rec)
         detail = " ".join(f"{k}={v}" for k, v in extra.items())
-        log_fn(f"[guard] step={step} event={event} "
+        msg = (f"[guard] step={step} event={event} "
                f"flags={rec['flag_names']}{(' ' + detail) if detail else ''}")
+        if self.telemetry is not None:
+            self.telemetry.record("guard", msg=msg, **rec)
+            self.telemetry.counter("guard_events_total",
+                                   labels={"event": event}).inc()
+        log_fn(msg)
 
     def demoted(self, step: int) -> bool:
         return step < self.demoted_until

@@ -120,22 +120,35 @@ class MemoryPlan:
     def wrap(self, f):
         """Wrap a layer (or layer-block / scan-group) body according to the
         policy.  This is the only place in the repository where
-        ``jax.checkpoint`` is invoked (tests/test_remat.py greps for it)."""
+        ``jax.checkpoint`` is invoked (tests/test_remat.py greps for it).
+
+        The body runs under a ``remat/<policy>`` named scope (obs/trace.py)
+        so profiler timelines and HLO dumps show each remat region — and its
+        backward recompute — by name.  Trace-time metadata only: zero ops."""
+        import functools
+
+        from repro.obs.trace import annotate
+
+        @functools.wraps(f)
+        def named(*args, **kwargs):
+            with annotate(f"remat/{self.policy}"):
+                return f(*args, **kwargs)
+
         if self.policy == "none":
-            return f
+            return f            # no checkpoint -> no remat region to name
         if self.policy == "full":
             return jax.checkpoint(
-                f, prevent_cse=False,
+                named, prevent_cse=False,
                 policy=jax.checkpoint_policies.save_only_these_names(
                     *BF16_STAGE_NAMES))
         if self.policy == "fp8_resident":
             return jax.checkpoint(
-                f, prevent_cse=False,
+                named, prevent_cse=False,
                 policy=jax.checkpoint_policies.save_only_these_names(
                     *FP8_SAVE_NAMES))
         # 'pair': plain input-only checkpoint; the two-layer blocking is the
         # driver's job (block_size / group_factor above)
-        return jax.checkpoint(f, prevent_cse=False)
+        return jax.checkpoint(named, prevent_cse=False)
 
 
 def saved_residuals(f, *args, **kwargs):

@@ -30,6 +30,7 @@ from repro.configs.base import ArchConfig
 from repro.core import quant
 from repro.core.recipes import Recipe
 from repro.models.lm import ParallelPlan, forward
+from repro.obs.trace import annotate
 from repro.optim import adamw, schedules
 from repro.train import guards
 
@@ -268,13 +269,16 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
                         # backward GEMMs: the pre-agreed-scale quantize +
                         # single-uint8-message RS (of the microbatch MEAN)
                         flat_m = flat * inv if grad_accum > 1 else flat
-                        if guard is not None:
-                            owned[bi], bad = grad_comm.reduce_scatter_bucket(
-                                flat_m, axis, n_dp, wire, guard=guard)
-                            wire_bad = jnp.logical_or(wire_bad, bad)
-                        else:
-                            owned[bi] = grad_comm.reduce_scatter_bucket(
-                                flat_m, axis, n_dp, wire)
+                        with annotate(f"wire/bucket{bi}_{stack}_l{l}"):
+                            if guard is not None:
+                                owned[bi], bad = \
+                                    grad_comm.reduce_scatter_bucket(
+                                        flat_m, axis, n_dp, wire,
+                                        guard=guard)
+                                wire_bad = jnp.logical_or(wire_bad, bad)
+                            else:
+                                owned[bi] = grad_comm.reduce_scatter_bucket(
+                                    flat_m, axis, n_dp, wire)
                         flat_acc[bi] = None
                     else:
                         flat_acc[bi] = flat
@@ -286,10 +290,11 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
                             g_s = g_s + sens_layer_acc[key]
                         if emit:
                             # the layer's bf16 psum rides with its bucket(s)
-                            sens_done_parts.setdefault(i, {})[l] = \
-                                grad_comm.reduce_sensitive(
-                                    g_s * inv if grad_accum > 1 else g_s,
-                                    axis, n_dp, wire)
+                            with annotate(f"wire/sensitive_{stack}_l{l}"):
+                                sens_done_parts.setdefault(i, {})[l] = \
+                                    grad_comm.reduce_sensitive(
+                                        g_s * inv if grad_accum > 1
+                                        else g_s, axis, n_dp, wire)
                             sens_layer_acc.pop(key, None)
                         else:
                             sens_layer_acc[key] = g_s
@@ -321,8 +326,10 @@ def _streamed_grads(cfg, recipe, lplan, params, batch, layout, axis, n_dp,
     if armed:
         # final drain: per-block reinjects + the dp_wire quantize records
         sv = quant.drain_stats()
-        metrics["quant_sat_frac"] = sv[0]
-        metrics["quant_flush_frac"] = sv[1]
+        sm = quant.site_maxima(sv)
+        metrics["quant_sat_frac"] = sm[0]
+        metrics["quant_flush_frac"] = sm[1]
+        metrics["quant_site_stats"] = sv
     return loss, metrics, owned, sens_done, sens_raw, wire_bad
 
 
@@ -418,13 +425,15 @@ def _make_dist_train_step(cfg: ArchConfig, recipe: Recipe, plan: ParallelPlan,
                     for _, bad in pairs:
                         wire_bad = jnp.logical_or(wire_bad, bad)
                     # wire-quantize stats recorded during the RS, after
-                    # forward() drained its own: merge them in
+                    # forward() drained its own: merge the site matrices
                     wire_sv = quant.drain_stats()
                     fwd_metrics = dict(fwd_metrics)
-                    fwd_metrics["quant_sat_frac"] = jnp.maximum(
-                        fwd_metrics["quant_sat_frac"], wire_sv[0])
-                    fwd_metrics["quant_flush_frac"] = jnp.maximum(
-                        fwd_metrics["quant_flush_frac"], wire_sv[1])
+                    sites = jnp.maximum(
+                        fwd_metrics["quant_site_stats"], wire_sv)
+                    sm = quant.site_maxima(sites)
+                    fwd_metrics["quant_site_stats"] = sites
+                    fwd_metrics["quant_sat_frac"] = sm[0]
+                    fwd_metrics["quant_flush_frac"] = sm[1]
                 else:
                     owned = [grad_comm.reduce_scatter_bucket(
                         bucket_flat(b, gleaves), axis, n_dp, dist.wire)

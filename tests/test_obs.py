@@ -1,0 +1,312 @@
+"""Unified telemetry layer (repro.obs): registry semantics, sink round
+trips, the per-site FP8 stats matrix riding the existing carries, and the
+ZERO-HOST-SYNC structural gate — observability must never add a device->
+host transfer or an activation cast to the step program.
+
+The gate mirrors benchmarks/guard_overhead_ab.py: count host-transfer op
+tokens (callback/infeed/outfeed/send/recv) in the jaxpr and compiled HLO of
+the fully instrumented step (named stage scopes + per-site stats + guard
+bitmask) and require ZERO — all device telemetry rides the loop's one
+existing per-step metrics fetch.
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import casts
+from repro.core import quant as quant_stats
+from repro.core.recipes import get_recipe
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.lm import ParallelPlan, forward, init_params
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry, po2_buckets
+from repro.obs.report import by_kind, load_records, render
+from repro.obs.sink import (JsonlSink, MemorySink, Telemetry, null_telemetry)
+from repro.obs.trace import STAGES, annotate, stage_annotation
+from repro.optim.adamw import AdamWConfig
+from repro.train.guards import GuardPlan, GuardPolicy
+from repro.train.loop import run as run_loop
+from repro.train.train_step import init_train_state, make_train_step
+
+_HOST_TRANSFER_TOKENS = ("callback", "infeed", "outfeed", "send", "recv")
+
+
+def _host_transfer_counts(text: str):
+    low = text.lower()
+    return {t: len(re.findall(rf"\b{t}", low)) for t in _HOST_TRANSFER_TOKENS}
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_po2_buckets_monotone():
+    edges = po2_buckets(-3, 5)
+    assert edges[0] == 2.0 ** -3 and edges[-1] == 2.0 ** 5
+    assert all(b == 2 * a for a, b in zip(edges, edges[1:]))
+
+
+def test_counter_monotonic():
+    c = Counter("n")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_histogram_observe_and_quantile():
+    h = Histogram("lat", po2_buckets(0, 6))    # edges 1..64
+    for v in (0.5, 3.0, 3.5, 40.0, 1000.0):
+        h.observe(v)
+    assert h.count == 5
+    assert h.sum == pytest.approx(1047.0)
+    assert h.mean == pytest.approx(1047.0 / 5)
+    # p50 lands in the bucket holding the 3rd of 5 observations
+    assert h.quantile(0.5) <= 8.0
+    # overflow observations clamp to the top edge (conservative)
+    assert h.quantile(1.0) == 64.0
+
+
+def test_histogram_merge_is_countwise():
+    edges = po2_buckets(0, 4)
+    a, b = Histogram("x", edges), Histogram("x", edges)
+    for v in (1.5, 3.0):
+        a.observe(v)
+    b.observe(12.0)
+    a.merge(b)
+    assert a.count == 3 and a.sum == pytest.approx(16.5)
+    with pytest.raises(ValueError):
+        a.merge(Histogram("x", po2_buckets(0, 5)))
+
+
+def test_registry_get_or_create_and_labels():
+    r = Registry()
+    c1 = r.counter("ticks", labels={"phase": "train"})
+    c2 = r.counter("ticks", labels={"phase": "train"})
+    c3 = r.counter("ticks", labels={"phase": "serve"})
+    assert c1 is c2 and c1 is not c3
+    with pytest.raises(TypeError):
+        r.gauge("ticks", labels={"phase": "train"})
+
+
+def test_prometheus_exposition():
+    r = Registry()
+    r.counter("steps_total").inc(3)
+    r.gauge("loss").set(2.5)
+    h = r.histogram("span_ms", po2_buckets(0, 2))
+    h.observe(1.5)
+    h.observe(100.0)
+    text = r.to_prometheus()
+    assert "# TYPE steps_total counter" in text
+    assert "steps_total 3" in text
+    assert "loss 2.5" in text
+    # cumulative buckets + the +Inf catch-all, then _sum/_count
+    assert 'span_ms_bucket{le="+Inf"} 2' in text
+    assert "span_ms_count 2" in text
+
+
+# ---------------------------------------------------------------------------
+# sinks + telemetry facade
+# ---------------------------------------------------------------------------
+def test_jsonl_sink_round_trip(tmp_path):
+    path = tmp_path / "run.jsonl"
+    tel = Telemetry(sinks=(JsonlSink(str(path)),))
+    tel.event("guard", msg="[guard] step=4 event=skip", step=4,
+              flags=int(np.uint32(3)))
+    tel.step(0, {"loss": 1.25}, spans={"device": 10.0, "fetch": 1.0},
+             extra={"quant_sites": {"q_entry_mlp": {"sat": 0.0,
+                                                    "flush": 0.0}}})
+    tel.close()
+    recs = load_records([str(path)])
+    kinds = by_kind(recs)
+    assert len(kinds["guard"]) == 1
+    assert kinds["guard"][0]["msg"] == "[guard] step=4 event=skip"
+    assert kinds["guard"][0]["flags"] == 3         # numpy scalar -> int
+    step = kinds["step"][0]
+    assert step["loss"] == 1.25 and step["device_ms"] == 10.0
+    assert step["quant_sites"]["q_entry_mlp"]["flush"] == 0.0
+
+
+def test_memory_sink_ring_and_event_rendering():
+    sink = MemorySink(capacity=3)
+    lines = []
+    tel = Telemetry(sinks=(sink,), log_fn=lines.append)
+    for i in range(5):
+        tel.event("tick", msg=f"line {i}", i=i)
+    assert len(sink.records) == 3                  # bounded ring
+    assert [r["i"] for r in sink.of_kind("tick")] == [2, 3, 4]
+    assert lines == [f"line {i}" for i in range(5)]  # msg verbatim
+
+
+def test_null_telemetry_still_logs():
+    lines = []
+    tel = null_telemetry(log_fn=lines.append)
+    assert not tel.enabled
+    tel.event("x", msg="human line")
+    tel.counter("n").inc()
+    assert lines == ["human line"]
+
+
+def test_report_renders_mixed_stream(tmp_path):
+    path = tmp_path / "mix.jsonl"
+    with open(path, "w") as f:
+        for rec in (
+            {"t": 0.0, "kind": "step", "step": 0, "loss": 2.0,
+             "device_ms": 9.0, "fetch_ms": 1.0, "total_ms": 10.5,
+             "quant_sites": {"dp_wire": [0.0, 0.1]}},
+            {"t": 1.0, "kind": "guard", "step": 0, "event": "skip",
+             "flags": 1, "flag_names": "nonfinite_loss"},
+            {"t": 2.0, "kind": "cast_ledger", "fn": "train_step",
+             "activation_casts": 2, "fused_casts": 7, "total": 9,
+             "by_tag": {"quantize:q_entry": 2}},
+            {"t": 3.0, "kind": "serve_tick", "n_decode": 3,
+             "kv_used_pages": 7},
+            {"t": 4.0, "kind": "request_done", "rid": 0, "ttft_ms": 50.0,
+             "tbt_ms_mean": 5.0, "n_tokens": 8},
+            {"t": 5.0, "kind": "bench", "name": "fig1", "value": 3.0,
+             "units": "us", "source": "measured", "derived": ""},
+        ):
+            f.write(json.dumps(rec) + "\n")
+    out = []
+    n = render(load_records([str(path)]), out=out.append)
+    assert n == 6
+    text = "\n".join(out)
+    for needle in ("train: 1 steps", "host fetch", "guard events",
+                   "cast-ledger", "serve:", "TTFT", "benchmark records"):
+        assert needle in text, text
+
+
+# ---------------------------------------------------------------------------
+# per-site FP8 stats: the (N_SITES, 2) matrix rides the existing carries
+# ---------------------------------------------------------------------------
+def test_site_stats_shape_and_maxima():
+    z = quant_stats.zero_stats()
+    assert z.shape == (len(quant_stats.STAT_SITES), quant_stats.STATS_LEN)
+    m = quant_stats.site_maxima(
+        jnp.asarray([[0.1, 0.0], [0.3, 0.2], [0.0, 0.5]]))
+    assert np.asarray(m).tolist() == [pytest.approx(0.3),
+                                      pytest.approx(0.5)]
+
+
+def _guarded_build(arch="qwen15_05b"):
+    from tests.conftest import make_mesh11
+    cfg = get_arch(arch).reduced()
+    mesh = make_mesh11()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=3e-3)
+    recipe = get_recipe("fp8_flow")
+    data = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    guard = GuardPlan()
+    raw = make_train_step(cfg, recipe, plan, opt, total_steps=100,
+                          warmup_steps=5, guard=guard)
+    state = init_train_state(cfg, opt, jax.random.key(0), guard=guard)
+    return mesh, raw, state, make_batch(data, 0)
+
+
+def test_site_stats_ride_guarded_step_metrics():
+    mesh, raw, state, batch = _guarded_build()
+    with mesh:
+        _, m = jax.jit(raw)(state, batch)
+    sv = np.asarray(m["quant_site_stats"])
+    assert sv.shape == (len(quant_stats.STAT_SITES), 2)
+    # guard scalars are exactly the max over sites (behavior-preserving)
+    assert float(m["quant_sat_frac"]) == sv[:, 0].max()
+    assert float(m["quant_flush_frac"]) == sv[:, 1].max()
+
+
+# ---------------------------------------------------------------------------
+# THE structural gate: obs adds zero host syncs and zero casts
+# ---------------------------------------------------------------------------
+def test_instrumented_step_has_zero_host_transfers():
+    mesh, raw, state, batch = _guarded_build()
+    with mesh:
+        jaxpr = str(jax.make_jaxpr(raw)(state, batch))
+        hlo = jax.jit(raw).lower(state, batch).compile().as_text()
+    for name, text in (("jaxpr", jaxpr), ("hlo", hlo)):
+        counts = _host_transfer_counts(text)
+        assert not any(counts.values()), (
+            f"instrumented {name} contains host-transfer ops {counts} — "
+            f"telemetry must ride the existing metrics fetch")
+    # the stage scopes ARE in the compiled program's metadata (named, free)
+    assert "stage/" in hlo and "remat/" in hlo
+
+
+def test_guard_stats_do_not_change_cast_ledger():
+    # the obs instrumentation (stage scopes + per-site stats collection,
+    # armed by guard) must not add quantize/dequantize ops: the guarded and
+    # unguarded step programs count the SAME activation casts.
+    from tests.conftest import make_mesh11
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh = make_mesh11()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    opt = AdamWConfig(lr=3e-3)
+    recipe = get_recipe("fp8_flow")
+    data = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    ledgers = {}
+    with mesh:
+        for name, guard in (("off", None), ("on", GuardPlan())):
+            raw = make_train_step(cfg, recipe, plan, opt, total_steps=100,
+                                  warmup_steps=5, guard=guard)
+            state = init_train_state(cfg, opt, jax.random.key(0),
+                                     guard=guard)
+            with casts.ledger() as led:
+                jax.eval_shape(raw, state, make_batch(data, 0))
+            ledgers[name] = led
+    assert ledgers["on"].by_tag() == ledgers["off"].by_tag()
+    assert ledgers["on"].activation_casts() == \
+        ledgers["off"].activation_casts()
+
+
+def test_annotate_is_zero_ops():
+    def f(x):
+        with annotate("stage/attn"):
+            y = x * 2
+        return y
+
+    def g(x):
+        return x * 2
+
+    x = jnp.ones((4,))
+    assert str(jax.make_jaxpr(f)(x)) == str(jax.make_jaxpr(g)(x))
+    assert [s for s in STAGES] == ["attn", "router", "dispatch", "expert",
+                                   "combine"]
+    with stage_annotation("attn"):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the loop's honest dt split + typed events
+# ---------------------------------------------------------------------------
+def test_loop_emits_split_timing_and_step_records():
+    cfg = get_arch("qwen15_05b").reduced()
+    plan = ParallelPlan(mesh=None)
+    opt = AdamWConfig(lr=1e-3)
+    recipe = get_recipe("fp8_flow")
+    guard = GuardPlan()
+    state = init_train_state(cfg, opt, jax.random.key(0), guard=guard)
+    step = jax.jit(make_train_step(cfg, recipe, plan, opt, total_steps=3,
+                                   warmup_steps=1, guard=guard))
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    sink = MemorySink()
+    lines = []
+    tel = Telemetry(sinks=(sink,))
+    _, hist = run_loop(step, state, data, n_steps=2, log_every=1,
+                       guard_policy=GuardPolicy(), telemetry=tel,
+                       log_fn=lines.append)
+    for h in hist:
+        assert {"step", "loss", "dt", "device_ms", "fetch_ms"} <= set(h)
+        # the split is honest: spans are inside the conflated dt
+        assert (h["device_ms"] + h["fetch_ms"]) <= h["dt"] * 1e3 + 1.0
+    steps = sink.of_kind("step")
+    assert len(steps) == 2
+    assert set(quant_stats.STAT_SITES) == set(steps[0]["quant_sites"])
+    # per-recompile cast-ledger snapshot: exactly one distinct callable
+    assert len(sink.of_kind("cast_ledger")) == 1
+    # human progress lines unchanged in shape
+    assert any(l.startswith("[loop] step=") for l in lines)
+    # the per-step sample landed in the registry
+    assert "train_loss" in tel.registry.snapshot()["gauges"]
