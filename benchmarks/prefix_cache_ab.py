@@ -1,0 +1,183 @@
+"""Radix prefix cache A/B: hit rate, skipped-prefill-FLOPs model, and
+bitwise hit-vs-miss parity on a multi-tenant shared-prefix trace.
+
+The cache maps full-page-aligned prompt prefixes to refcounted FP8 pages
+(serve/prefix_cache.py): a hit stitches the shared pages into the request's
+page table and starts chunked prefill at the matched length, so the matched
+tokens' prefill FLOPs are skipped outright and the shared prefix is
+quantized once per pool, not once per request.  Because the per-row po2
+quantize is deterministic (paper Eq. 5-8), reading a cached page is
+bit-for-bit reading the page the request would have written itself — which
+is what makes sharing safe and what the parity gate checks.
+
+Usage:
+  PYTHONPATH=src python benchmarks/prefix_cache_ab.py --dry-run   # CI smoke
+  PYTHONPATH=src python benchmarks/prefix_cache_ab.py             # timed
+
+Acceptance gates (checked in BOTH modes):
+  * >= 50% of trace prompt tokens served from cache (K tenants x shared
+    system prompt + unique tails; page-aligned matching loses < page_size
+    tokens per request);
+  * generated tokens are BITWISE IDENTICAL cache-on vs cache-off for every
+    request (greedy decode; same trace, same geometry);
+  * the linear-layer FLOPs model shows the skipped prefill work
+    proportional to the hit rate;
+  * a 2-replica prefix-aware router spreads the tenants across the fleet
+    (every replica used, fleet-level hits recorded).
+Timed mode additionally reports mean/p99 TTFT cache-on vs cache-off.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:          # invoked as `python benchmarks/...py`
+    sys.path.insert(0, os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import emit
+
+
+def linear_flops_per_token(cfg) -> float:
+    """Matmul FLOPs one prompt token costs in prefill, counting the
+    token-linear layers (QKVO + MLP/expert GEMMs; the O(T^2) attention
+    score term is excluded, so the model is a LOWER bound on savings)."""
+    attn = 2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+        + 2 * cfg.n_heads * cfg.head_dim * cfg.d_model
+    if cfg.moe:
+        d_ff = cfg.d_ff_expert or cfg.d_ff
+        experts = cfg.top_k + cfg.n_shared_experts
+        mlp = experts * 3 * 2 * cfg.d_model * d_ff
+    else:
+        mlp = 3 * 2 * cfg.d_model * cfg.d_ff
+    return cfg.n_layers * (attn + mlp)
+
+
+def run(dry_run: bool = False):
+    import jax
+    from benchmarks.serve_throughput import make_shared_prefix_trace
+    from repro.configs import get_arch
+    from repro.core.recipes import get_recipe
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.lm import ParallelPlan, init_params
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.router import ReplicaRouter, RouterConfig
+
+    cfg = get_arch("qwen3_moe_235b").reduced()
+    plan = ParallelPlan(mesh=make_test_mesh(), dp_axes=("data",))
+    params = init_params(cfg, jax.random.key(0))
+    recipe = get_recipe("fp8_flow")
+
+    n_requests = 10 if dry_run else 24
+    # page-aligned chunk geometry (prefill_chunk == page_size) keeps the
+    # hit path's chunk boundaries identical to the miss path's -> bitwise
+    ecfg_kw = dict(max_batch=4, page_size=4, n_pages=64,
+                   max_pages_per_req=8, token_budget=256,
+                   prefill_buckets=(16, 32), prefill_chunk=4,
+                   fp8_kv=True, w8_weights=True, seed=0)
+
+    def trace():
+        return make_shared_prefix_trace(
+            n_requests, rate_hz=50.0, seed=7, vocab=cfg.vocab,
+            n_tenants=3, prefix_len=8, max_tail=4, max_new=4)
+
+    runs = {}
+    for cache in (False, True):
+        eng = ServeEngine(cfg, recipe, plan, params,
+                          ServeConfig(prefix_cache=cache, **ecfg_kw))
+        reqs = trace()
+        t0 = time.perf_counter()
+        results = eng.run(reqs, realtime=False)
+        dt = time.perf_counter() - t0
+        ttfts = np.array([v["first_token"] - v["arrival"]
+                          for v in results.values()])
+        runs[cache] = {
+            "reqs": reqs, "results": results, "stats": eng.stats(),
+            "makespan": dt, "mean_ttft": float(ttfts.mean()),
+            "p99_ttft": float(np.percentile(ttfts, 99)),
+        }
+
+    off, on = runs[False], runs[True]
+
+    # -- gate 1: bitwise hit-vs-miss parity (same trace, greedy) -----------
+    toks_off = [off["results"][q.rid]["tokens"] for q in off["reqs"]]
+    toks_on = [on["results"][q.rid]["tokens"] for q in on["reqs"]]
+    assert len(toks_off) == len(toks_on) == n_requests, \
+        f"finished {len(toks_off)} vs {len(toks_on)} of {n_requests}"
+    for i, (a, b) in enumerate(zip(toks_off, toks_on)):
+        assert a == b, (f"request {i}: cache-on tokens diverge from "
+                        f"cache-off: {a} vs {b}")
+
+    # -- gate 2: hit rate on the shared-prefix trace -----------------------
+    total_prompt = sum(len(q.prompt) for q in on["reqs"])
+    hit_tokens = on["stats"]["prefix_hit_tokens"]
+    hit_rate = hit_tokens / total_prompt
+    assert hit_rate >= 0.5, \
+        f"prefix hit rate {hit_rate:.2f} < 0.5 on a shared-prefix trace"
+    assert off["stats"].get("prefix_hit_tokens", 0) == 0
+
+    # -- gate 3: skipped-prefill-FLOPs model -------------------------------
+    fpt = linear_flops_per_token(cfg)
+    saved = hit_tokens * fpt
+    total = total_prompt * fpt
+    assert saved / total == hit_rate > 0
+
+    emit("prefix_cache/hit_rate", hit_rate,
+         derived=f"{hit_tokens}/{total_prompt} prompt tokens", units="frac",
+         kind="measured")
+    emit("prefix_cache/skipped_prefill_gflops", saved / 1e9,
+         derived=f"of {total / 1e9:.2f} GFLOP prompt linear work",
+         units="GFLOP", kind="modeled")
+    emit("prefix_cache/shared_pages", on["stats"]["shared_pages"],
+         units="pages", kind="measured")
+
+    # -- gate 4: 2-replica prefix-aware router smoke -----------------------
+    engines = [ServeEngine(cfg, recipe, plan, params,
+                           ServeConfig(prefix_cache=True, **ecfg_kw))
+               for _ in range(2)]
+    router = ReplicaRouter(engines, RouterConfig())
+    rres = router.run(trace(), realtime=False)
+    rstats = rres.stats
+    assert rstats["routed"] == n_requests
+    assert rstats["finished"] == n_requests
+    assert all(c > 0 for c in rstats["route_counts"]), \
+        f"router starved a replica: {rstats['route_counts']}"
+    assert rstats["prefix_hits"] > 0, "no fleet-level prefix hits"
+    fleet_hit_rate = rstats["prefix_hit_tokens"] / total_prompt
+    emit("prefix_cache/router_fleet_hit_rate", fleet_hit_rate,
+         derived=f"route_counts={rstats['route_counts']}", units="frac",
+         kind="measured")
+
+    if dry_run:
+        print(f"prefix_cache_ab: dry-run OK (hit_rate={hit_rate:.2f}, "
+              f"{n_requests}/{n_requests} requests bitwise on==off, "
+              f"modeled {saved / 1e9:.2f} GFLOP prefill skipped, "
+              f"router route_counts={rstats['route_counts']} "
+              f"fleet_hit_rate={fleet_hit_rate:.2f})")
+        return
+
+    # -- timed: TTFT effect of the cache on the same trace -----------------
+    emit("prefix_cache/mean_ttft_off_ms", off["mean_ttft"] * 1e3, units="ms")
+    emit("prefix_cache/mean_ttft_on_ms", on["mean_ttft"] * 1e3, units="ms")
+    emit("prefix_cache/p99_ttft_off_ms", off["p99_ttft"] * 1e3, units="ms")
+    emit("prefix_cache/p99_ttft_on_ms", on["p99_ttft"] * 1e3, units="ms")
+    print(f"prefix_cache_ab: hit_rate={hit_rate:.2f}  "
+          f"mean_ttft {off['mean_ttft']*1e3:.0f} -> "
+          f"{on['mean_ttft']*1e3:.0f} ms  "
+          f"p99_ttft {off['p99_ttft']*1e3:.0f} -> "
+          f"{on['p99_ttft']*1e3:.0f} ms  "
+          f"makespan {off['makespan']:.2f} -> {on['makespan']:.2f} s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="structural gates only (CI): hit rate, bitwise "
+                         "parity, FLOPs model, 2-replica router smoke")
+    args = ap.parse_args()
+    run(dry_run=args.dry_run)

@@ -4,7 +4,8 @@ KV) vs bf16 (BF16 weights + BF16 paged KV).
 
   PYTHONPATH=src python benchmarks/serve_throughput.py --reduced \
       [--requests 32] [--rate 20] [--arch qwen3_moe_235b] \
-      [--prefill-chunk 16] [--compare-prefill]
+      [--prefill-chunk 16] [--compare-prefill] \
+      [--shared-prefix 4] [--compare-prefix-cache]
 
 Reports, per recipe (and per prefill mode with --compare-prefill, which runs
 the SAME trace chunked vs monolithic so the decode-latency / TTFT win of
@@ -12,7 +13,18 @@ bounded prefill slices is measured, not asserted):
   tok/s        — generated tokens / makespan
   p50/p99 lat  — request completion latency (arrival -> last token)
   p50/p99 ttft — time to first token (arrival -> first sampled token)
+  hit rate     — prefix-cache hit tokens / total prompt tokens (cache on)
   kv bytes     — resident paged-pool footprint (FP8 pages ~halve this)
+
+--shared-prefix K generates a MULTI-TENANT trace: K tenants, each with its
+own fixed system prompt, every request = tenant prefix + unique tail — the
+workload the radix prefix cache targets.  --compare-prefix-cache runs the
+same trace cache-on vs cache-off so the hit-rate -> TTFT effect is measured.
+
+Every result row also flows through benchmarks/common.emit(), so with
+REPRO_BENCH_JSONL set the per-request TTFT percentiles, throughput, and
+cache-hit-rate land in the unified bench JSONL stream the obs reporter
+renders.
 
 The trace has more requests than engine slots, so admission/eviction and
 batch-mix churn are exercised for real (max concurrent < #requests).
@@ -42,9 +54,43 @@ def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int,
     return reqs
 
 
+def make_shared_prefix_trace(n_requests: int, rate_hz: float, seed: int,
+                             vocab: int, n_tenants: int = 4,
+                             prefix_len: int = 16, max_tail: int = 8,
+                             max_new: int = 12):
+    """Multi-tenant Poisson trace: K tenants x (shared system prompt +
+    unique tail).  Tenants are drawn uniformly per arrival, so every
+    tenant's prefix recurs throughout the trace — the canonical
+    prefix-cache workload (system prompts / few-shot headers)."""
+    from repro.serve.scheduler import Request
+    r = np.random.default_rng(seed)
+    prefixes = [list(r.integers(1, vocab, prefix_len))
+                for _ in range(n_tenants)]
+    t = 0.0
+    reqs = []
+    for _ in range(n_requests):
+        t += float(r.exponential(1.0 / rate_hz))
+        tenant = int(r.integers(0, n_tenants))
+        tail = list(r.integers(1, vocab, int(r.integers(1, max_tail + 1))))
+        reqs.append(Request(
+            prompt=prefixes[tenant] + tail,
+            max_new_tokens=int(r.integers(2, max_new + 1)),
+            arrival_time=t))
+    return reqs
+
+
+def build_trace(args, vocab):
+    if args.shared_prefix:
+        return make_shared_prefix_trace(
+            args.requests, args.rate, args.seed, vocab,
+            n_tenants=args.shared_prefix, prefix_len=args.prefix_len,
+            max_tail=args.max_tail)
+    return make_trace(args.requests, args.rate, args.seed, vocab,
+                      max_prompt=args.max_prompt)
+
+
 def run_recipe(recipe_name: str, cfg, plan, params, args,
-               prefill_chunk=None):
-    import jax
+               prefill_chunk=None, prefix_cache=False):
     from repro.core.recipes import get_recipe
     from repro.serve.engine import ServeConfig, ServeEngine
 
@@ -54,11 +100,12 @@ def run_recipe(recipe_name: str, cfg, plan, params, args,
         max_batch=args.max_batch, page_size=args.page_size,
         n_pages=args.n_pages, max_pages_per_req=args.max_pages,
         token_budget=args.token_budget, prefill_buckets=(16, 32, 64),
-        prefill_chunk=prefill_chunk, fp8_kv=fp8, w8_weights=fp8, seed=0)
+        prefill_chunk=prefill_chunk, fp8_kv=fp8, w8_weights=fp8,
+        prefix_cache=prefix_cache, seed=0)
     eng = ServeEngine(cfg, recipe, plan, params, ecfg)
-    reqs = make_trace(args.requests, args.rate, args.seed, cfg.vocab,
-                      max_prompt=args.max_prompt)
+    reqs = build_trace(args, cfg.vocab)
     assert len(reqs) > ecfg.max_batch, "trace must oversubscribe the batch"
+    total_prompt = sum(len(q.prompt) for q in reqs)
 
     t0 = time.perf_counter()
     results = eng.run(reqs, realtime=not args.closed_loop)
@@ -68,15 +115,19 @@ def run_recipe(recipe_name: str, cfg, plan, params, args,
     ttfts = np.array([v["first_token"] - v["arrival"]
                       for v in results.values()])
     n_tok = sum(len(v["tokens"]) for v in results.values())
+    hit_tokens = sum(v["cached_tokens"] for v in results.values())
     return {
         "recipe": recipe_name,
         "prefill": f"chunk{prefill_chunk}" if prefill_chunk else "mono",
+        "cache": "on" if prefix_cache else "off",
         "finished": len(results),
         "tok_s": n_tok / makespan,
+        "mean_ttft": float(ttfts.mean()),
         "p50_lat": float(np.percentile(lats, 50)),
         "p99_lat": float(np.percentile(lats, 99)),
         "p50_ttft": float(np.percentile(ttfts, 50)),
         "p99_ttft": float(np.percentile(ttfts, 99)),
+        "hit_rate": hit_tokens / total_prompt,
         "max_concurrent": eng.max_concurrent,
         "kv_bytes": eng.kv_bytes(),
     }
@@ -107,9 +158,23 @@ def main():
                     help="run each recipe twice — monolithic vs chunked "
                          "prefill on the SAME trace — to measure the "
                          "p50/p99 TTFT effect of bounded prefill slices")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="K",
+                    help="multi-tenant trace: K tenants x (shared system "
+                         "prompt + unique tail) instead of fully random "
+                         "prompts")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="shared system-prompt length per tenant")
+    ap.add_argument("--max-tail", type=int, default=8,
+                    help="longest per-request unique tail")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the radix prefix cache")
+    ap.add_argument("--compare-prefix-cache", action="store_true",
+                    help="run each recipe cache-on vs cache-off on the "
+                         "SAME trace — measures hit rate vs TTFT/p99")
     args = ap.parse_args()
 
     import jax
+    from benchmarks.common import emit
     from repro.configs import get_arch
     from repro.launch.mesh import make_production_mesh, make_test_mesh
     from repro.launch.sharding import make_plan
@@ -125,25 +190,44 @@ def main():
         plan = make_plan(cfg, mesh)
     params = init_params(cfg, jax.random.key(0))
 
-    print("recipe,prefill,finished,tok_s,p50_lat_s,p99_lat_s,p50_ttft_s,"
-          "p99_ttft_s,max_concurrent,kv_MiB")
+    print("recipe,prefill,cache,finished,tok_s,p50_lat_s,p99_lat_s,"
+          "p50_ttft_s,p99_ttft_s,hit_rate,max_concurrent,kv_MiB")
 
     def report(r):
-        print(f"{r['recipe']},{r['prefill']},{r['finished']},{r['tok_s']:.1f},"
+        print(f"{r['recipe']},{r['prefill']},{r['cache']},{r['finished']},"
+              f"{r['tok_s']:.1f},"
               f"{r['p50_lat']:.3f},{r['p99_lat']:.3f},"
               f"{r['p50_ttft']:.3f},{r['p99_ttft']:.3f},"
+              f"{r['hit_rate']:.3f},"
               f"{r['max_concurrent']},{r['kv_bytes']/2**20:.1f}")
+        tag = f"serve/{r['recipe']}/{r['prefill']}/cache_{r['cache']}"
+        emit(f"{tag}/tok_s", r["tok_s"], units="tok/s")
+        emit(f"{tag}/mean_ttft_ms", r["mean_ttft"] * 1e3, units="ms")
+        emit(f"{tag}/p50_ttft_ms", r["p50_ttft"] * 1e3, units="ms")
+        emit(f"{tag}/p99_ttft_ms", r["p99_ttft"] * 1e3, units="ms")
+        emit(f"{tag}/p99_lat_ms", r["p99_lat"] * 1e3, units="ms")
+        emit(f"{tag}/cache_hit_rate", r["hit_rate"],
+             derived=f"{r['finished']} reqs", units="frac")
 
     for name in args.recipes.split(","):
+        name = name.strip()
+        chunk = args.prefill_chunk
         if args.compare_prefill:
-            chunk = args.prefill_chunk or 16
-            report(run_recipe(name.strip(), cfg, plan, params, args,
-                              prefill_chunk=None))
-            report(run_recipe(name.strip(), cfg, plan, params, args,
-                              prefill_chunk=chunk))
+            chunk = chunk or 16
+            report(run_recipe(name, cfg, plan, params, args,
+                              prefill_chunk=None,
+                              prefix_cache=args.prefix_cache))
+            report(run_recipe(name, cfg, plan, params, args,
+                              prefill_chunk=chunk,
+                              prefix_cache=args.prefix_cache))
+        elif args.compare_prefix_cache:
+            for cache in (False, True):
+                report(run_recipe(name, cfg, plan, params, args,
+                                  prefill_chunk=chunk, prefix_cache=cache))
         else:
-            report(run_recipe(name.strip(), cfg, plan, params, args,
-                              prefill_chunk=args.prefill_chunk))
+            report(run_recipe(name, cfg, plan, params, args,
+                              prefill_chunk=chunk,
+                              prefix_cache=args.prefix_cache))
 
 
 if __name__ == "__main__":

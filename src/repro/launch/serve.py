@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--token-budget", type=int, default=512)
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: max prompt tokens per tick")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: shared page-aligned prompt "
+                         "prefixes are quantized+prefilled once and reused "
+                         "across requests (refcounted FP8 KV pages)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--bf16-kv", action="store_true")
     ap.add_argument("--no-w8", action="store_true")
@@ -71,7 +75,8 @@ def main():
         token_budget=args.token_budget, prefill_buckets=(16, 32, 64),
         prefill_chunk=args.prefill_chunk,
         fp8_kv=fp8 and not args.bf16_kv,
-        w8_weights=fp8 and not args.no_w8, seed=args.seed)
+        w8_weights=fp8 and not args.no_w8,
+        prefix_cache=args.prefix_cache, seed=args.seed)
     from repro.obs.sink import JsonlSink, Telemetry, null_telemetry
     if args.obs_jsonl is not None or args.obs_prom is not None:
         sinks = (JsonlSink(args.obs_jsonl),) if args.obs_jsonl else ()
@@ -101,6 +106,12 @@ def main():
           f"evicted={s['evicted']} finished={s['finished']} "
           f"prefill_chunks={s['prefill_chunks']} "
           f"decode_tokens={s['decode_tokens']}")
+    if args.prefix_cache:
+        total_prompt = sum(len(q.prompt) for q in reqs)
+        print(f"[serve] prefix cache: hits={s['prefix_hits']}/"
+              f"{s['prefix_lookups']} hit_tokens={s['prefix_hit_tokens']}"
+              f"/{total_prompt} shared_pages={s['shared_pages']} "
+              f"cache_evictions={s['cache_evictions']}")
     if args.obs_prom is not None:
         tel.write_prometheus(args.obs_prom)
         print(f"[serve] wrote metrics snapshot to {args.obs_prom}")

@@ -158,10 +158,36 @@ def render_serve(kinds, out):
         ev = sum(r.get("n_evictions", 0) for r in done)
         if ev:
             out(f"  evictions across finished requests: {ev}")
+        cached = sum(r.get("cached_tokens", 0) for r in done)
+        if cached:
+            out(f"  prompt tokens served from prefix cache: {cached}")
     for r in summ:
         c = {k: v for k, v in r.items() if k not in ("t", "kind")}
         out("  totals: " + " ".join(f"{k}={int(v)}"
                                     for k, v in sorted(c.items())))
+    hits = kinds.get("prefix_hit", [])
+    if hits:
+        toks = [r.get("cached_tokens", 0) for r in hits]
+        cow = sum(1 for r in hits if r.get("cow"))
+        out(f"  prefix cache: {len(hits)} hit admissions, "
+            f"{sum(toks)} cached tokens "
+            f"(max {max(toks)}/request, {cow} copy-on-write)")
+    routes = kinds.get("route", [])
+    if routes:
+        per: Dict[int, List[dict]] = {}
+        for r in routes:
+            per.setdefault(r.get("replica", -1), []).append(r)
+        out(f"  router: {len(routes)} decisions over {len(per)} replicas")
+        for idx in sorted(per):
+            ov = [r.get("overlap", 0.0) for r in per[idx]]
+            ld = [r.get("load", 0.0) for r in per[idx]]
+            out(f"    replica {idx}: {len(per[idx])} requests  "
+                f"mean_overlap={sum(ov)/len(ov):.2f}  "
+                f"mean_load={sum(ld)/len(ld):.2f}")
+    for r in kinds.get("router_summary", []):
+        c = {k: v for k, v in r.items() if k not in ("t", "kind")}
+        out("  fleet totals: " + " ".join(f"{k}={int(v)}"
+                                          for k, v in sorted(c.items())))
 
 
 def render_bench(recs, out):
@@ -187,14 +213,16 @@ def render(recs, out=print) -> int:
         render_casts(kinds["cast_ledger"], out)
     if "wire_layout" in kinds:
         render_wire(kinds["wire_layout"], out)
-    if "serve_tick" in kinds or "request_done" in kinds \
-            or "serve_summary" in kinds:
+    if any(k in kinds for k in ("serve_tick", "request_done",
+                                "serve_summary", "prefix_hit", "route",
+                                "router_summary")):
         render_serve(kinds, out)
     if "bench" in kinds:
         render_bench(kinds["bench"], out)
     other = [k for k in kinds if k not in
              ("step", "guard", "cast_ledger", "wire_layout", "serve_tick",
-              "request_done", "serve_summary", "bench", "registry")]
+              "request_done", "serve_summary", "prefix_hit", "route",
+              "router_summary", "bench", "registry")]
     if other:
         out("== other records ==")
         for k in sorted(other):

@@ -51,7 +51,7 @@ from repro.core.recipes import Recipe
 from repro.models.lm import (ParallelPlan, paged_decode_step, paged_prefill)
 from repro.obs.metrics import po2_buckets
 from repro.obs.sink import null_telemetry
-from repro.serve.paged_kv import (PageAllocator, init_paged_cache,
+from repro.serve.paged_kv import (PageAllocator, copy_page, init_paged_cache,
                                   pool_nbytes)
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
@@ -87,6 +87,11 @@ class ServeConfig:
                                        # largest bucket (chunks must fit it)
     fp8_kv: bool = True                # e4m3 pages w/ po2 scales, else bf16
     w8_weights: bool = False           # pre-quantize expert weights (fp8_flow)
+    prefix_cache: bool = False         # radix prefix cache over the KV pool:
+                                       # shared page-aligned prompt prefixes
+                                       # are quantized+prefilled once and
+                                       # reused (refcounted pages; LRU leaf
+                                       # eviction under pool pressure)
     top_k: int = 0                     # 0 -> full-vocab sampling
     eos_id: Optional[int] = None
     seed: int = 0
@@ -167,7 +172,16 @@ class ServeEngine:
         self.pools = init_paged_cache(cfg, ecfg.n_pages, ecfg.page_size,
                                       fp8_kv=ecfg.fp8_kv)
         self.alloc = PageAllocator(ecfg.n_pages, ecfg.page_size)
-        self.sched = Scheduler(ecfg.max_batch, ecfg.token_budget)
+        self.prefix_cache = None
+        release_hook = None
+        if ecfg.prefix_cache:
+            from repro.serve.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(ecfg.page_size, telemetry=self.tel)
+            # the single scheduler release point: decref instead of free, so
+            # cache-held pages survive their writer finishing/being evicted
+            release_hook = lambda st, pages, alloc: alloc.decref(pages)
+        self.sched = Scheduler(ecfg.max_batch, ecfg.token_budget,
+                               release_hook=release_hook)
         self._step_fn = make_engine_step(cfg, recipe, plan, ecfg)
         self._key = jax.random.key(ecfg.seed)
         self._tick_count = 0
@@ -204,13 +218,21 @@ class ServeEngine:
         self.sched.submit(req)
 
     # -- one tick ----------------------------------------------------------
+    def _alloc_pages(self, n: int):
+        """Pool allocation with the prefix cache as the first pressure
+        valve: LRU unreferenced radix leaves are dropped before any
+        resident request is considered for eviction."""
+        if self.prefix_cache is not None:
+            return self.prefix_cache.alloc_pages(self.alloc, n)
+        return self.alloc.alloc(n)
+
     def _grow_pages(self, st: RequestState) -> bool:
         """Ensure st's page table covers its next write; evicts YOUNGER
         residents under pressure (st self-evicts when it is the youngest —
         the oldest resident always progresses).  False if st got unseated."""
         need = st.next_pos // self.ecfg.page_size + 1
         while len(st.pages) < need:
-            got = self.alloc.alloc(1)
+            got = self._alloc_pages(1)
             if got is not None:
                 st.pages.extend(got)
                 continue
@@ -243,7 +265,24 @@ class ServeEngine:
         # starved by more than one bounded chunk per tick.
         pf = sched.mid_prefill()
         if pf is None:
-            pf = sched.try_admit(self.alloc, now)
+            pf = sched.try_admit(self.alloc, now,
+                                 prefix_cache=self.prefix_cache)
+            if pf is not None and pf.cached_tokens:
+                self.tel.record("prefix_hit", rid=pf.req.rid,
+                                cached_tokens=pf.cached_tokens,
+                                shared_pages=pf.n_shared_pages,
+                                cow=pf.cow_page is not None)
+        if pf is not None and pf.cow_page is not None:
+            # whole-prompt hit: duplicate the boundary page so the
+            # recomputed final-token row writes a PRIVATE copy and the
+            # shared original stays immutable
+            src, dst = pf.cow_page
+            pf.cow_page = None
+            ctx = self.plan.mesh if self.plan.mesh is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                self.pools = copy_page(self.pools, jnp.int32(src),
+                                       jnp.int32(dst))
         if pf is None and not decode_slots:
             return False
 
@@ -320,6 +359,12 @@ class ServeEngine:
         if pf is not None:
             pf.prefill_pos += chunk
             if final_chunk:
+                if self.prefix_cache is not None:
+                    # every full prompt page is now written and stable
+                    # (decode rows land beyond them) -> publish the prefix;
+                    # blocks already cached keep their canonical pages
+                    self.prefix_cache.insert(pf.req.prompt, pf.pages,
+                                             self.alloc)
                 # only the last chunk's logits are meaningful (the prompt's
                 # final position) — intermediate chunks just fill pages
                 self._emit(pf, int(out["prefill_tok"]), now, results)
@@ -355,7 +400,8 @@ class ServeEngine:
             self.tel.record("request_done", rid=st.req.rid, n_tokens=n_tok,
                             ttft_ms=ttft_ms, tbt_ms_mean=tbt_ms_mean,
                             wait_ms=(st.admit_time - st.req.arrival_time)
-                            * 1e3, n_evictions=st.n_evictions)
+                            * 1e3, n_evictions=st.n_evictions,
+                            cached_tokens=st.cached_tokens)
             results[st.req.rid] = {
                 "tokens": list(st.generated),
                 "arrival": st.req.arrival_time,
@@ -363,6 +409,7 @@ class ServeEngine:
                 "first_token": st.first_token_time,
                 "finish": now,
                 "n_evictions": st.n_evictions,
+                "cached_tokens": st.cached_tokens,
             }
 
     # -- driver ------------------------------------------------------------
@@ -401,12 +448,15 @@ class ServeEngine:
         """Run-level aggregate counters (also on run()'s TraceResults.stats
         and in the obs registry as serve_* counters)."""
         s = self.sched.stats()
-        return {"ticks": self._tick_count, "admitted": s["admitted"],
-                "evicted": s["evicted"], "finished": s["finished"],
-                "rejected": self.n_rejected,
-                "prefill_chunks": self.n_prefill_chunks,
-                "decode_tokens": self.total_decoded,
-                "max_concurrent": self.max_concurrent}
+        out = {"ticks": self._tick_count, "admitted": s["admitted"],
+               "evicted": s["evicted"], "finished": s["finished"],
+               "rejected": self.n_rejected,
+               "prefill_chunks": self.n_prefill_chunks,
+               "decode_tokens": self.total_decoded,
+               "max_concurrent": self.max_concurrent}
+        if self.prefix_cache is not None:
+            out.update(self.prefix_cache.stats())
+        return out
 
     # -- reporting ---------------------------------------------------------
     def kv_bytes(self) -> int:

@@ -22,7 +22,8 @@ entry quantization (the paper's Eq. 5-8 idempotence property).
 from __future__ import annotations
 
 from collections import deque
-from typing import List, Optional
+from functools import partial
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +34,20 @@ SCRATCH_PAGE = 0
 
 
 # ---------------------------------------------------------------------------
-# Host-side free-list allocator.
+# Host-side refcounted free-list allocator.
 # ---------------------------------------------------------------------------
 class PageAllocator:
-    """Free-list over page ids [1, n_pages); page 0 is the scratch page."""
+    """Refcounted free-list over page ids [1, n_pages); page 0 is scratch.
+
+    `alloc` hands pages out with refcount 1.  A page becomes SHARED when a
+    second owner takes a reference (`incref`) — the prefix cache does this
+    for every page it maps, and every request reusing a cached prefix does
+    it again for the pages it stitches into its table.  Owners return pages
+    through `decref`; the page rejoins the free list only when the count
+    reaches 0, so a shared prefix page survives its original writer
+    finishing for as long as the cache (or any reader) still references it.
+    `free` is the legacy single-owner spelling of `decref`.
+    """
 
     def __init__(self, n_pages: int, page_size: int):
         if n_pages < 2:
@@ -44,29 +55,62 @@ class PageAllocator:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free = deque(range(1, n_pages))
-        self._allocated = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def live_pages(self) -> int:
+        return len(self._refs)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages with more than one outstanding reference."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages, or None (caller decides to wait/evict) — never partial."""
+        """n pages at refcount 1, or None (caller decides to wait/evict the
+        scheduler's residents/drop cache leaves) — never partial."""
         if n > len(self._free):
             return None
         out = [self._free.popleft() for _ in range(n)]
-        self._allocated.update(out)
+        for p in out:
+            self._refs[p] = 1
         return out
 
-    def free(self, pages: List[int]) -> None:
+    def incref(self, pages: List[int]) -> None:
         for p in pages:
-            if p not in self._allocated:
+            if p not in self._refs:
+                raise ValueError(f"incref of unallocated page {p}")
+            self._refs[p] += 1
+
+    def decref(self, pages: List[int]) -> List[int]:
+        """Drop one reference per page; returns the pages that reached
+        refcount 0 and went back to the free list."""
+        freed = []
+        for p in pages:
+            c = self._refs.get(p)
+            if c is None:
                 raise ValueError(f"double free / foreign page {p}")
-            self._allocated.remove(p)
-            self._free.append(p)
+            if c == 1:
+                del self._refs[p]
+                self._free.append(p)
+                freed.append(p)
+            else:
+                self._refs[p] = c - 1
+        return freed
+
+    def free(self, pages: List[int]) -> None:
+        """Legacy single-owner release (== decref; raises on double free)."""
+        self.decref(pages)
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +178,19 @@ def page_write_rows(pool_l, rows, page_idx, slot_idx):
         out["data"] = pool_l["data"].at[page_idx, slot_idx].set(
             rows.astype(pool_l["data"].dtype))
     return out
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def copy_page(pools, src, dst):
+    """Copy ONE page's rows (payload + scales, every layer of every stack)
+    src -> dst.  The prefix cache's copy-on-write: when a request's whole
+    page-aligned prompt hits the cache it still must recompute its LAST
+    token for logits, and that token's KV row lands inside the final cached
+    page — so the boundary page is duplicated into a private page the
+    request may write, and the shared original stays immutable.  `src`/`dst`
+    are traced scalars: one compile covers every page pair."""
+    return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]),
+                        pools)
 
 
 def page_read(pool_l, page_tables, dtype=jnp.bfloat16):

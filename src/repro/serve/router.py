@@ -1,0 +1,155 @@
+"""Prefix-aware multi-replica router: one front door over N ServeEngines.
+
+One engine instance is not a production service.  The router owns the
+global request queue and, per arriving request, scores every replica
+flexlb-style (rtp-llm's ``KvCacheManager`` + load-balance scoring):
+
+    score = w_prefix * cached_prefix_overlap - w_load * load
+
+  * **overlap** — the fraction of the request's prompt already resident in
+    that replica's radix prefix cache (``PrefixCache.match_tokens``, a pure
+    peek: no LRU touch, no hit accounting).  Routing a request to the
+    replica that already holds its prefix turns the prefill into a cache
+    hit: the prompt is quantized once per FLEET, not once per replica.
+  * **load** — the mean of the replica's reserved-token-budget fill and its
+    KV-pool page occupancy, so a cold replica absorbs new tenants instead
+    of piling every popular prefix onto one engine.
+
+Ties (e.g. a fleet of cold replicas) break toward the least-loaded replica,
+then round-robin, so unprefixed traffic still spreads.
+
+The driver interleaves `engine.tick` across replicas in one thread — the
+same cooperative loop ServeEngine.run uses, generalized to N engines — and
+merges per-request results/stats into one TraceResults.  Every routing
+decision lands in telemetry (`route` records + per-replica counters) so the
+reporter can show placement quality next to hit rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.sink import null_telemetry
+from repro.serve.engine import ServeEngine, TraceResults
+from repro.serve.scheduler import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    w_prefix: float = 1.0       # weight of cached-prefix overlap
+    w_load: float = 1.0         # weight of the load penalty
+    min_overlap: float = 0.0    # overlap below this scores as 0 (ignore
+                                # trivial matches when balancing load)
+
+
+class ReplicaRouter:
+    """Score-and-dispatch over N ServeEngine replicas."""
+
+    def __init__(self, engines: Sequence[ServeEngine],
+                 rcfg: RouterConfig = RouterConfig(), telemetry=None):
+        if not engines:
+            raise ValueError("router needs at least one replica")
+        self.engines = list(engines)
+        self.rcfg = rcfg
+        self.tel = telemetry if telemetry is not None else null_telemetry()
+        self.n_routed = 0
+        self._rr = 0                      # round-robin tie-break cursor
+        self.route_counts = [0] * len(self.engines)
+
+    # -- scoring -----------------------------------------------------------
+    def overlap(self, idx: int, req: Request) -> float:
+        eng = self.engines[idx]
+        if eng.prefix_cache is None or not req.prompt:
+            return 0.0
+        ov = eng.prefix_cache.match_tokens(req.prompt) / len(req.prompt)
+        return ov if ov >= self.rcfg.min_overlap else 0.0
+
+    def load(self, idx: int) -> float:
+        eng = self.engines[idx]
+        budget_fill = eng.sched.reserved_tokens / max(eng.ecfg.token_budget,
+                                                      1)
+        pool = max(eng.ecfg.n_pages - 1, 1)
+        page_fill = (pool - eng.alloc.free_pages) / pool
+        return 0.5 * (budget_fill + page_fill)
+
+    def score(self, idx: int, req: Request) -> float:
+        return self.rcfg.w_prefix * self.overlap(idx, req) \
+            - self.rcfg.w_load * self.load(idx)
+
+    # -- dispatch ----------------------------------------------------------
+    def route(self, req: Request) -> int:
+        """Pick a replica for `req` (argmax score; ties toward the least
+        loaded, then round-robin) and submit it there."""
+        n = len(self.engines)
+        scored = [(self.score(i, req), -self.load(i), i) for i in range(n)]
+        best = max(s for s, _, _ in scored)
+        tied = [t for t in scored if t[0] >= best - 1e-12]
+        if len(tied) > 1:
+            best_load = max(l for _, l, _ in tied)
+            tied = [t for t in tied if t[1] >= best_load - 1e-12]
+        idx = tied[(self._rr % len(tied))][2] if len(tied) > 1 else tied[0][2]
+        if len(tied) > 1:
+            self._rr += 1
+        ov = self.overlap(idx, req)
+        self.engines[idx].submit(req)
+        self.n_routed += 1
+        self.route_counts[idx] += 1
+        self.tel.counter("router_decisions",
+                         labels={"replica": str(idx)}).inc()
+        if self.tel.enabled:
+            self.tel.record("route", rid=req.rid, replica=idx,
+                            overlap=round(ov, 4),
+                            load=round(self.load(idx), 4),
+                            prompt_tokens=len(req.prompt))
+        return idx
+
+    # -- driver ------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            realtime: bool = True) -> Dict[int, dict]:
+        """Drive a trace across the fleet: route each request at its
+        arrival, interleave one tick per replica, merge results."""
+        pending = deque(sorted(requests, key=lambda r: r.arrival_time))
+        results = TraceResults()
+        t0 = time.perf_counter()
+        idle_spins = 0
+        while pending or not all(e.sched.idle() for e in self.engines):
+            now = time.perf_counter() - t0
+            while pending and (not realtime
+                               or pending[0].arrival_time <= now):
+                self.route(pending.popleft())
+            progressed = [e.tick(now, results) for e in self.engines]
+            if any(progressed):
+                idle_spins = 0
+                continue
+            if pending:
+                time.sleep(max(0.0, min(0.002,
+                                        pending[0].arrival_time - now)))
+                continue
+            idle_spins += 1
+            if idle_spins > 1000:
+                raise RuntimeError(
+                    "router deadlock: waiting requests can never be "
+                    "admitted on any replica (check token_budget / n_pages)")
+        results.stats = self.stats()
+        self.tel.record("router_summary", **{
+            k: v for k, v in results.stats.items()
+            if not isinstance(v, (list, dict))})
+        self.tel.flush()
+        return results
+
+    def stats(self) -> Dict[str, object]:
+        """Fleet aggregate + per-replica breakdown."""
+        agg: Dict[str, object] = {"replicas": len(self.engines),
+                                  "routed": self.n_routed,
+                                  "route_counts": list(self.route_counts)}
+        per = [e.stats() for e in self.engines]
+        for key in ("ticks", "admitted", "evicted", "finished", "rejected",
+                    "prefill_chunks", "decode_tokens", "prefix_hits",
+                    "prefix_lookups", "prefix_hit_tokens", "cache_evictions"):
+            vals = [p[key] for p in per if key in p]
+            if vals:
+                agg[key] = sum(vals)
+        agg["per_replica"] = per
+        return agg

@@ -66,8 +66,18 @@ class RequestState:
     prefilled: bool = False
     prefill_pos: int = 0           # tokens prefilled so far (chunked prefill:
                                    # advances one bounded slice per tick;
-                                   # == len(prompt) once prefill is complete)
+                                   # == len(prompt) once prefill is complete.
+                                   # A prefix-cache hit starts this at the
+                                   # matched length, so the tail rides the
+                                   # SAME continuation machinery)
     n_evictions: int = 0
+    cached_tokens: int = 0         # prompt tokens served from shared prefix
+                                   # pages — their prefill is skipped and
+                                   # they are discounted from the budget
+    n_shared_pages: int = 0        # leading pages of `pages` held via incref
+                                   # (read-only; the request must not write)
+    cow_page: Optional[tuple] = None  # (src, dst): boundary page to copy
+                                   # before this request's first chunk runs
 
     @property
     def next_pos(self) -> int:
@@ -84,11 +94,19 @@ class RequestState:
 
 
 class Scheduler:
-    """FCFS + decode-priority + reserved-token-budget admission control."""
+    """FCFS + decode-priority + reserved-token-budget admission control.
 
-    def __init__(self, max_batch: int, token_budget: int):
+    `release_hook` is the single exit point for a resident's pages: every
+    path that returns pages (finish, eviction) funnels through it, so a
+    prefix cache can intercept releases (decref shared pages, keep cached
+    ones alive) without forking the scheduler.  The default hook is the
+    allocator's own single-owner free.
+    """
+
+    def __init__(self, max_batch: int, token_budget: int, release_hook=None):
         self.max_batch = max_batch
         self.token_budget = token_budget
+        self.release_hook = release_hook   # callable(state, pages, allocator)
         self.waiting: deque = deque()
         self.active: Dict[int, RequestState] = {}      # slot -> state
         self._free_slots = list(range(max_batch - 1, -1, -1))
@@ -96,12 +114,18 @@ class Scheduler:
         self.n_finished = 0
         self.n_evictions = 0
         self.n_admitted = 0
+        self.cached_prompt_tokens = 0                  # prefix-cache skips
         self._eviction_counts: Dict[int, int] = {}     # rid -> times evicted
 
     # -- introspection -----------------------------------------------------
     @property
     def reserved_tokens(self) -> int:
-        return sum(st.req.reserved_tokens for st in self.active.values())
+        """Worst-case token reservation over residents.  Tokens served from
+        shared prefix pages are discounted: their KV rows already exist (and
+        are pinned by the request's refs for its whole lifetime), so only
+        un-cached pages count against the budget."""
+        return sum(st.req.reserved_tokens - st.cached_tokens
+                   for st in self.active.values())
 
     @property
     def n_active(self) -> int:
@@ -132,27 +156,58 @@ class Scheduler:
         self.waiting.append(req)
 
     # -- admission ---------------------------------------------------------
-    def try_admit(self, allocator: PageAllocator,
-                  now: float) -> Optional[RequestState]:
+    def try_admit(self, allocator: PageAllocator, now: float,
+                  prefix_cache=None) -> Optional[RequestState]:
         """Admit the queue head if a slot, the token budget, and prompt pages
         all allow it.  Returns the new RequestState (pages allocated,
         prefill still pending) or None.  Strictly FCFS: if the head does not
-        fit, nothing behind it is considered."""
+        fit, nothing behind it is considered.
+
+        With a prefix cache, the head's prompt is first matched against the
+        radix tree: matched pages are shared (incref, zero prefill compute),
+        only the un-cached tail reserves budget and allocates fresh pages,
+        and `prefill_pos` starts at the matched length so the tail rides the
+        chunked-prefill continuation path.  A whole-prompt hit keeps its
+        last cached page as copy-on-write (`cow_page`) — the engine copies
+        it before the final-token chunk writes into it."""
         if not self.waiting or not self._free_slots:
             return None
         req = self.waiting[0]
-        if self.reserved_tokens + req.reserved_tokens > self.token_budget:
+        match = prefix_cache.lookup(req.prompt) if prefix_cache is not None \
+            else None
+        cached_tokens = match.tokens if match else 0
+        if self.reserved_tokens + req.reserved_tokens - cached_tokens \
+                > self.token_budget:
             return None
-        pages = allocator.alloc(allocator.pages_for(len(req.prompt)))
-        if pages is None:
+        n_total = allocator.pages_for(len(req.prompt))
+        shared = list(match.pages[:-1] if match.cow else match.pages) \
+            if match else []
+        # pin the matched pages BEFORE allocating the tail: the tail alloc
+        # may evict cache leaves, and a bare cache ref would make the match
+        # itself a victim
+        allocator.incref(shared)
+        n_fresh = n_total - len(shared)
+        fresh = (prefix_cache.alloc_pages(allocator, n_fresh)
+                 if prefix_cache is not None else allocator.alloc(n_fresh)) \
+            if n_fresh else []
+        if fresh is None:
+            allocator.decref(shared)
             return None
         self.waiting.popleft()
         slot = self._free_slots.pop()
-        st = RequestState(req=req, slot=slot, pages=pages,
+        st = RequestState(req=req, slot=slot, pages=shared + fresh,
                           admit_seq=next(self._admit_seq), admit_time=now,
-                          n_evictions=self._eviction_counts.get(req.rid, 0))
+                          n_evictions=self._eviction_counts.get(req.rid, 0),
+                          cached_tokens=cached_tokens,
+                          n_shared_pages=len(shared),
+                          prefill_pos=cached_tokens)
+        if match and match.cow:
+            st.cow_page = (match.pages[-1], fresh[0])
         self.active[slot] = st
         self.n_admitted += 1
+        self.cached_prompt_tokens += cached_tokens
+        if prefix_cache is not None:
+            prefix_cache.record_admitted(match)
         return st
 
     # -- eviction / completion --------------------------------------------
@@ -181,6 +236,9 @@ class Scheduler:
         st.generated.clear()           # restart: KV + tokens are recomputed
         st.prefilled = False
         st.prefill_pos = 0             # chunked-prefill progress is discarded
+        st.cached_tokens = 0           # re-admission re-matches the cache
+        st.n_shared_pages = 0
+        st.cow_page = None
         st.n_evictions += 1
         self.n_evictions += 1
         self._eviction_counts[st.req.rid] = st.n_evictions
@@ -196,7 +254,13 @@ class Scheduler:
         return st
 
     def _release(self, st: RequestState, allocator: PageAllocator) -> None:
-        allocator.free(st.pages)
-        st.pages = []
+        """The ONLY place a resident's pages leave the scheduler — both
+        finish() and evict_youngest() funnel here, so `release_hook` sees
+        every release (the prefix cache decrefs instead of freeing)."""
+        pages, st.pages = st.pages, []
+        if self.release_hook is not None:
+            self.release_hook(st, pages, allocator)
+        else:
+            allocator.free(pages)
         del self.active[st.slot]
         self._free_slots.append(st.slot)

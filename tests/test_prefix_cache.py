@@ -1,0 +1,368 @@
+"""Radix prefix cache over the paged FP8 KV pool: allocator refcount
+properties, radix insert/match/split/evict invariants, the scheduler's
+single release hook + cache-aware budget accounting, deterministic page
+content (what makes sharing safe), router scoring, and the end-to-end
+bitwise guarantee that generated tokens are identical cache-on vs
+cache-off."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.recipes import get_recipe
+from repro.models.lm import ParallelPlan, init_params, paged_prefill
+from repro.serve.paged_kv import PageAllocator, init_paged_cache
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import Request, Scheduler
+from tests.conftest import make_mesh11
+
+
+# ---------------------------------------------------------------------------
+# Allocator refcount properties (pure host).
+# ---------------------------------------------------------------------------
+def test_refcount_lifecycle_and_sharing():
+    a = PageAllocator(n_pages=8, page_size=4)
+    owner = a.alloc(3)
+    assert all(a.refcount(p) == 1 for p in owner)
+    a.incref(owner)                               # cache takes its reference
+    assert all(a.refcount(p) == 2 for p in owner)
+    assert a.shared_pages == 3
+    freed = a.decref(owner)                       # owner request finishes
+    assert freed == []                            # cache ref keeps them alive
+    assert all(a.refcount(p) == 1 for p in owner)
+    assert a.free_pages == 7 - 3                  # still resident
+    freed = a.decref(owner)                       # cache evicts
+    assert sorted(freed) == sorted(owner)
+    assert a.free_pages == 7
+    assert a.live_pages == 0
+
+
+def test_refcount_never_negative_no_double_free():
+    a = PageAllocator(n_pages=4, page_size=4)
+    pages = a.alloc(2)
+    a.decref(pages)
+    with pytest.raises(ValueError):
+        a.decref(pages)                           # double free
+    with pytest.raises(ValueError):
+        a.decref([3])                             # never-allocated page
+    with pytest.raises(ValueError):
+        a.incref([pages[0]])                      # resurrecting a dead page
+    assert all(a.refcount(p) == 0 for p in pages)  # counts never go negative
+
+
+def test_refcount_randomized_conservation():
+    """Property: after any interleaving of alloc/incref/decref, free +
+    live == n_pages - 1 and every refcount is >= 1 for live pages."""
+    rng = np.random.default_rng(0)
+    a = PageAllocator(n_pages=16, page_size=4)
+    held = []                                     # one entry per reference
+    for _ in range(400):
+        op = rng.integers(0, 3)
+        if op == 0:
+            got = a.alloc(int(rng.integers(1, 4)))
+            if got is not None:
+                held.extend(got)
+        elif op == 1 and held:
+            p = held[int(rng.integers(len(held)))]
+            a.incref([p])
+            held.append(p)
+        elif op == 2 and held:
+            p = held.pop(int(rng.integers(len(held))))
+            a.decref([p])
+        assert a.free_pages + a.live_pages == 15
+        for p in set(held):
+            assert a.refcount(p) == held.count(p) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Radix tree invariants (pure host).
+# ---------------------------------------------------------------------------
+def _fill(cache, alloc, tokens):
+    """Simulate a finished request: alloc its pages, insert, release its
+    own refs (the cache's refs keep cached pages alive)."""
+    pages = alloc.alloc(alloc.pages_for(len(tokens)))
+    cache.insert(tokens, pages, alloc)
+    alloc.decref(pages)
+    return pages
+
+
+def test_radix_insert_match_split():
+    ps = 4
+    alloc = PageAllocator(n_pages=32, page_size=ps)
+    cache = PrefixCache(page_size=ps)
+    a = list(range(100, 112))                     # 3 full blocks
+    pa = _fill(cache, alloc, a)
+    cache.check_invariants(alloc)
+    # full-prefix match is page-aligned and in page order
+    assert cache.match_tokens(a + [1, 2]) == 12
+    m = cache.lookup(a + [1, 2])
+    assert m.pages == pa[:3] and m.tokens == 12 and not m.cow
+    # partial-block tails never match
+    assert cache.match_tokens(a[:6]) == 4
+    # diverge after block 1 -> mid-edge split, shared prefix kept canonical
+    b = a[:4] + list(range(200, 208))
+    _fill(cache, alloc, b)
+    cache.check_invariants(alloc)
+    mb = cache.lookup(b + [9])
+    assert mb.pages[0] == pa[0] and mb.tokens == 12
+    ma = cache.lookup(a + [9])                    # original still fully cached
+    assert ma.pages == pa[:3]
+    # a third divergence off the same shared head
+    c = a[:4] + list(range(300, 304))
+    _fill(cache, alloc, c)
+    cache.check_invariants(alloc)
+    assert cache.lookup(c + [9]).pages[0] == pa[0]
+
+
+def test_whole_prompt_hit_is_cow_capped():
+    ps = 4
+    alloc = PageAllocator(n_pages=16, page_size=ps)
+    cache = PrefixCache(page_size=ps)
+    a = list(range(8))
+    _fill(cache, alloc, a)
+    m = cache.lookup(list(a))                     # identical whole prompt
+    assert m.cow and m.tokens == len(a) - 1       # last token recomputed
+    assert len(m.pages) == 2                      # boundary page included
+    # re-inserting an already-cached prompt is a no-op
+    pages = alloc.alloc(2)
+    assert cache.insert(a, pages, alloc) == 0
+    alloc.decref(pages)
+    cache.check_invariants(alloc)
+
+
+def test_lru_eviction_prefers_cold_leaves_and_skips_pinned():
+    ps = 4
+    alloc = PageAllocator(n_pages=9, page_size=ps)   # 8 usable
+    cache = PrefixCache(page_size=ps)
+    cold = _fill(cache, alloc, list(range(0, 16)))      # 4 pages
+    hot = _fill(cache, alloc, list(range(100, 116)))    # 4 pages
+    assert alloc.free_pages == 0
+    cache.lookup(list(range(100, 118)))           # touch hot's LRU clock
+    got = cache.alloc_pages(alloc, 2)             # must evict to satisfy
+    assert got is not None and len(got) == 2
+    assert cache.match_tokens(list(range(100, 118))) == 16   # hot survives
+    assert cache.match_tokens(list(range(0, 18))) < 16       # cold trimmed
+    cache.check_invariants(alloc)
+    alloc.decref(got)
+    # pinned pages (a resident's incref) are never evicted
+    alloc.incref(hot)                             # resident uses the prefix
+    assert cache.alloc_pages(alloc, 8) is None    # only cold remnants evict
+    assert cache.match_tokens(list(range(100, 118))) == 16
+    cache.check_invariants(alloc)
+    assert all(alloc.refcount(p) == 2 for p in hot)
+
+
+def test_hit_stats_count_once_per_admission():
+    ps = 4
+    alloc = PageAllocator(n_pages=16, page_size=ps)
+    cache = PrefixCache(page_size=ps)
+    _fill(cache, alloc, list(range(8)))
+    for _ in range(5):                            # blocked head re-lookups
+        m = cache.lookup(list(range(8)) + [42])
+    assert cache.n_lookups == cache.n_hits == 0   # lookup is stat-free
+    cache.record_admitted(m)
+    cache.record_admitted(None)                   # a miss admission
+    s = cache.stats()
+    assert s["prefix_lookups"] == 2 and s["prefix_hits"] == 1
+    assert s["prefix_hit_tokens"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: release hook + cache-aware admission (pure host).
+# ---------------------------------------------------------------------------
+def test_release_hook_sees_every_release():
+    released = []
+    alloc = PageAllocator(n_pages=32, page_size=4)
+    sched = Scheduler(max_batch=2, token_budget=64,
+                      release_hook=lambda st, pages, a: (
+                          released.append((st.req.rid, tuple(pages))),
+                          a.decref(pages)))
+    r1 = Request(prompt=[1] * 8, max_new_tokens=4)
+    r2 = Request(prompt=[2] * 8, max_new_tokens=4)
+    sched.submit(r1), sched.submit(r2)
+    s1 = sched.try_admit(alloc, now=0.0)
+    s2 = sched.try_admit(alloc, now=0.0)
+    sched.evict_youngest(alloc, requester=s1)     # eviction path
+    s1.generated.extend([0] * 4)
+    sched.finish(s1.slot, alloc, now=1.0)         # finish path
+    assert [rid for rid, _ in released] == [r2.rid, r1.rid]
+    assert all(pages for _, pages in released)
+    assert alloc.free_pages == 31                 # hook actually freed
+
+
+def test_cache_aware_admission_discounts_budget_and_pins_shared():
+    ps = 4
+    alloc = PageAllocator(n_pages=32, page_size=ps)
+    cache = PrefixCache(page_size=ps)
+    prefix = list(range(500, 512))                # 12 tokens, 3 pages
+    shared = _fill(cache, alloc, prefix)
+    # budget fits ONLY with the cached 12 tokens discounted
+    sched = Scheduler(max_batch=2, token_budget=10,
+                      release_hook=lambda st, p, a: a.decref(p))
+    req = Request(prompt=prefix + [1, 2], max_new_tokens=4)  # reserves 18
+    sched.submit(req)
+    st = sched.try_admit(alloc, now=0.0, prefix_cache=cache)
+    assert st is not None, "cached tokens must not count against the budget"
+    assert st.cached_tokens == 12 and st.prefill_pos == 12
+    assert st.pages[:3] == shared and st.n_shared_pages == 3
+    assert sched.reserved_tokens == 18 - 12
+    assert all(alloc.refcount(p) == 2 for p in shared)   # cache + request
+    sched.evict_youngest(alloc)                   # restart semantics
+    assert all(alloc.refcount(p) == 1 for p in shared)   # request ref dropped
+    assert cache.match_tokens(prefix + [0]) == 12        # cache unaffected
+
+
+def test_admission_rollback_restores_shared_refs():
+    ps = 4
+    alloc = PageAllocator(n_pages=4, page_size=ps)       # 3 usable
+    cache = PrefixCache(page_size=ps)
+    prefix = list(range(8))                       # 2 pages cached
+    shared = _fill(cache, alloc, prefix)
+    alloc.incref(shared)                          # pretend a resident pins it
+    assert alloc.free_pages == 1
+    sched = Scheduler(max_batch=2, token_budget=64,
+                      release_hook=lambda st, p, a: a.decref(p))
+    # needs 2 fresh pages but only 1 exists and nothing is evictable
+    sched.submit(Request(prompt=prefix + [1] * 6, max_new_tokens=2))
+    assert sched.try_admit(alloc, now=0.0, prefix_cache=cache) is None
+    assert all(alloc.refcount(p) == 2 for p in shared)   # incref rolled back
+    assert len(sched.waiting) == 1                # head stays queued
+
+
+# ---------------------------------------------------------------------------
+# Deterministic page content: the property that makes sharing safe.
+# ---------------------------------------------------------------------------
+def test_fp8_pages_are_content_addressable():
+    """The same tokens prefilled at the same positions produce BITWISE
+    identical e4m3 payloads and po2 scales regardless of which physical
+    pages they land in — so handing a request somebody else's pages is
+    indistinguishable from its own prefill (paper Eq. 5-8 idempotence)."""
+    cfg = get_arch("qwen15_05b").reduced()
+    mesh = make_mesh11()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    params = init_params(cfg, jax.random.key(0))
+    recipe = get_recipe("fp8_flow")
+    ps, mp, P = 4, 4, 12
+    pools = init_paged_cache(cfg, n_pages=16, page_size=ps, fp8_kv=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, P).astype(np.int32)
+    toks = np.zeros((1, 16), np.int32)
+    toks[0, :P] = prompt
+
+    def run_at(pools, pages):
+        ptrow = np.zeros((mp,), np.int32)
+        ptrow[:len(pages)] = pages
+        with mesh:
+            lg, pools = paged_prefill(cfg, recipe, plan, params, pools,
+                                      jnp.asarray(ptrow), jnp.asarray(toks),
+                                      jnp.int32(P))
+        return lg, pools
+
+    lg1, pools = run_at(pools, [1, 2, 3])
+    lg2, pools = run_at(pools, [7, 9, 11])        # same prompt, other pages
+    for stack in pools.values():
+        for kv in ("k", "v"):
+            data = np.asarray(stack[kv]["data"])
+            scale = np.asarray(stack[kv]["scale"])
+            np.testing.assert_array_equal(
+                data[:, [1, 2, 3]].view(np.uint8),
+                data[:, [7, 9, 11]].view(np.uint8))
+            np.testing.assert_array_equal(scale[:, [1, 2, 3]],
+                                          scale[:, [7, 9, 11]])
+    np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))
+
+
+# ---------------------------------------------------------------------------
+# Router scoring (host-side; fake replicas).
+# ---------------------------------------------------------------------------
+class _FakeSched:
+    def __init__(self):
+        self.reserved_tokens = 0
+
+
+class _FakeEngine:
+    """Just enough surface for ReplicaRouter.route()."""
+    def __init__(self, ps=4, n_pages=64, budget=256):
+        from repro.serve.engine import ServeConfig
+        self.ecfg = ServeConfig(page_size=ps, n_pages=n_pages,
+                                token_budget=budget, prefix_cache=True)
+        self.alloc = PageAllocator(n_pages, ps)
+        self.prefix_cache = PrefixCache(ps)
+        self.sched = _FakeSched()
+        self.submitted = []
+
+    def submit(self, req):
+        self.submitted.append(req)
+
+
+def test_router_prefers_prefix_overlap_then_load():
+    from repro.serve.router import ReplicaRouter, RouterConfig
+    e0, e1 = _FakeEngine(), _FakeEngine()
+    prefix = list(range(700, 716))
+    _fill(e1.prefix_cache, e1.alloc, prefix)      # replica 1 holds the prefix
+    router = ReplicaRouter([e0, e1], RouterConfig())
+    idx = router.route(Request(prompt=prefix + [1, 2], max_new_tokens=4))
+    assert idx == 1                               # affinity wins
+    # overlap loses to load once the replica is saturated
+    e1.sched.reserved_tokens = e1.ecfg.token_budget
+    for p in range(1, e1.ecfg.n_pages):           # pool fully occupied
+        if e1.alloc.refcount(p) == 0:
+            e1.alloc.alloc(1)
+    heavy = ReplicaRouter([e0, e1], RouterConfig(w_prefix=0.2, w_load=2.0))
+    assert heavy.route(Request(prompt=prefix + [3], max_new_tokens=4)) == 0
+    # no-overlap traffic round-robins across equally loaded replicas
+    rr = ReplicaRouter([_FakeEngine(), _FakeEngine()], RouterConfig())
+    picks = {rr.route(Request(prompt=[9, 9, 9], max_new_tokens=2))
+             for _ in range(4)}
+    assert picks == {0, 1}
+    assert sum(rr.route_counts) == 4
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: bitwise-identical decode, cache on vs off.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_bitwise_identical_cache_on_vs_off():
+    """Same shared-prefix trace through two engines — with and without the
+    radix cache.  Page-aligned chunk geometry (prefill_chunk == page_size)
+    makes the hit path's chunk boundaries identical to the miss path's, so
+    greedy decode must be BITWISE identical; the cache run must also
+    actually hit (including a whole-prompt copy-on-write case) and return
+    every page."""
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_arch("qwen3_moe_235b").reduced()
+    mesh = make_mesh11()
+    plan = ParallelPlan(mesh=mesh, dp_axes=("data",))
+    recipe = get_recipe("fp8_flow")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(11)
+    prefix = list(rng.integers(1, cfg.vocab, 8))
+    prompts = [prefix + list(rng.integers(1, cfg.vocab, k))
+               for k in (3, 4, 2, 1)]
+    prompts.append(list(prompts[0]))              # whole-prompt hit -> CoW
+    prompts.append(prefix[:4] + [7, 8, 9])        # mid-edge divergence
+
+    def run(cache_on):
+        ecfg = ServeConfig(max_batch=3, page_size=4, n_pages=32,
+                           max_pages_per_req=8, token_budget=128,
+                           prefill_buckets=(16,), prefill_chunk=4,
+                           fp8_kv=True, w8_weights=True,
+                           prefix_cache=cache_on)
+        eng = ServeEngine(cfg, recipe, plan, params, ecfg)
+        reqs = [Request(prompt=list(p), max_new_tokens=4) for p in prompts]
+        results = eng.run(reqs, realtime=False)
+        return eng, [results[q.rid]["tokens"] for q in reqs]
+
+    eng_off, toks_off = run(False)
+    eng_on, toks_on = run(True)
+    assert toks_on == toks_off                    # bitwise-identical decode
+    s = eng_on.stats()
+    assert s["prefix_hits"] >= 3 and s["prefix_hit_tokens"] >= 20
+    assert s["prefix_lookups"] == len(prompts)
+    eng_on.prefix_cache.check_invariants(eng_on.alloc)
+    # cached pages are the only live ones; scheduler returned all its refs
+    assert eng_on.alloc.live_pages == eng_on.prefix_cache.n_cached_pages
+    assert all(eng_on.alloc.refcount(p) == 1
+               for n in eng_on.prefix_cache._iter_nodes() for p in n.pages)
+    assert eng_off.alloc.free_pages == 31         # no-cache path unchanged
