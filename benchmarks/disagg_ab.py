@@ -1,0 +1,238 @@
+"""Prefill/decode disaggregation A/B: bitwise parity, zero-requantization
+proof, and the modeled time-between-tokens win under long-prefill
+interference.
+
+A mixed engine runs every resident decode in the SAME jitted tick as the
+current prefill chunk, so a long prompt taxes every in-flight generation:
+each decode token's latency inherits the chunk's compute.  The two-tier
+fleet (serve/router.py DisaggRouter) moves finished prefills to dedicated
+decode replicas by migrating their FP8 KV pages bit-for-bit
+(serve/transfer.py — pure bitcast of e4m3 payload + po2-exponent scales,
+provably casting-free), making decode ticks pure decode.
+
+Usage:
+  PYTHONPATH=src python benchmarks/disagg_ab.py --dry-run   # CI smoke
+  PYTHONPATH=src python benchmarks/disagg_ab.py             # timed
+
+Acceptance gates (checked in BOTH modes):
+  * transfer codec: pack -> unpack -> scatter round-trip is BIT-IDENTICAL
+    on the live pools, and both codec jaxprs contain ZERO floating-point
+    numeric ops (assert_casting_free — migration cannot quantize,
+    dequantize, or cast anything);
+  * same mixed-interference trace through a 1-prefill + 1-decode fleet and
+    a single-tier engine produces BITWISE-IDENTICAL generated tokens;
+  * every migrated request's prompt pages on the receiver are bit-equal to
+    the donor's (payload bytes AND po2 scale exponents);
+  * modeled decode TBT under interference: per-tick cost = prefill-chunk
+    tokens + decode batch size (what one jitted tick computes); p99 over
+    per-decode-token costs must improve by >= the threshold on the decode
+    tier, where chunk == 0 STRUCTURALLY;
+  * a one-page-batch transfer budget still migrates every request (the
+    budget throttles bursts, it can never starve the handoff queue).
+Timed mode additionally reports wall-clock per-token TBT percentiles.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:          # invoked as `python benchmarks/...py`
+    sys.path.insert(0, os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import emit
+
+TBT_P99_IMPROVEMENT_MIN = 1.3        # modeled single-tier/disagg p99 ratio
+
+
+def modeled_tbt_costs(tick_records):
+    """Per-decode-token modeled latency: each token generated in a tick
+    costs that tick's total compute units (prefill chunk tokens + decode
+    batch size) — the interference model the disaggregation removes."""
+    costs = []
+    for r in tick_records:
+        k = int(r.get("n_decode", 0))
+        if k:
+            costs.extend([int(r.get("chunk", 0)) + k] * k)
+    return np.asarray(costs, np.float64)
+
+
+def page_bytes(eng, pages):
+    """Flat uint8 gather of `pages` from an engine's live pools (payload
+    bytes + scale exponents, via the transfer codec itself).  One page per
+    gather: bucket padding would drag in SCRATCH_PAGE rows, whose garbage
+    differs across engines."""
+    return np.concatenate([
+        np.asarray(eng.codec._gather(eng.pools, eng.codec._pad_ids([p])))
+        for p in pages])
+
+
+def run(dry_run: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.serve_throughput import make_mixed_interference_trace
+    from repro.configs import get_arch
+    from repro.core.recipes import get_recipe
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.lm import ParallelPlan, init_params
+    from repro.obs.sink import MemorySink, Telemetry
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.router import DisaggConfig, DisaggRouter
+
+    cfg = get_arch("qwen3_moe_235b").reduced()
+    plan = ParallelPlan(mesh=make_test_mesh(), dp_axes=("data",))
+    params = init_params(cfg, jax.random.key(0))
+    recipe = get_recipe("fp8_flow")
+
+    n_requests = 9 if dry_run else 24
+    ecfg_kw = dict(max_batch=4, page_size=4, n_pages=64,
+                   max_pages_per_req=16, token_budget=256,
+                   prefill_buckets=(16, 32), prefill_chunk=4,
+                   fp8_kv=True, w8_weights=True, prefix_cache=True, seed=0)
+
+    def trace():
+        return make_mixed_interference_trace(
+            n_requests, rate_hz=50.0, seed=7, vocab=cfg.vocab,
+            long_every=3, long_prompt=40, max_prompt=6,
+            min_new=8, max_new=12)
+
+    def engine(role="mixed"):
+        sink = MemorySink()
+        tel = Telemetry(sinks=(sink,))
+        eng = ServeEngine(cfg, recipe, plan, params,
+                          ServeConfig(role=role, **ecfg_kw), telemetry=tel)
+        return eng, sink
+
+    # -- gate 1: codec round-trip + casting-free jaxprs --------------------
+    single, single_sink = engine("mixed")
+    single.codec.assert_casting_free(single.pools, n=3)
+    probe = [1, 2, 3, 4]                  # pow2 batch: no scratch padding
+    ids = single.codec._pad_ids(probe)
+    src = np.asarray(single.codec._gather(single.pools, ids))
+    blank = jax.tree.map(jnp.zeros_like, single.pools)
+    blank = single.codec.scatter(blank, src, probe)
+    rt = np.asarray(single.codec._gather(blank, ids))
+    assert (rt == src).all(), "codec round-trip is not bit-identical"
+
+    # -- single-tier baseline ---------------------------------------------
+    reqs1 = trace()
+    t0 = time.perf_counter()
+    res1 = single.run(reqs1, realtime=False)
+    dt_single = time.perf_counter() - t0
+    toks1 = [res1[q.rid]["tokens"] for q in reqs1]
+    assert len(res1) == n_requests
+
+    # -- disaggregated fleet, same trace -----------------------------------
+    pe, _ = engine("prefill")
+    de, de_sink = engine("decode")
+    router = DisaggRouter([pe], [de])
+    reqs2 = trace()
+    t0 = time.perf_counter()
+    res2 = router.run(reqs2, realtime=False)
+    dt_disagg = time.perf_counter() - t0
+    toks2 = [res2[q.rid]["tokens"] for q in reqs2]
+    dstats = router.stats()["disagg"]
+
+    # -- gate 2: bitwise parity --------------------------------------------
+    for i, (a, b) in enumerate(zip(toks1, toks2)):
+        assert a == b, (f"request {i}: disagg tokens diverge from "
+                        f"single-tier: {a} vs {b}")
+    assert dstats["migrations"] == n_requests, \
+        f"{dstats['migrations']} migrations != {n_requests} requests"
+
+    # -- gate 3: migrated pages bit-equal donor vs receiver ----------------
+    # with the prefix cache on, the donor keeps every migrated prompt's
+    # full-block pages and the receiver republished them on adopt — gather
+    # both through the codec and compare raw bytes (payload + exponents)
+    n_compared = 0
+    for q in reqs2:
+        dp = pe.prefix_cache.match_pages(q.prompt)
+        rp = de.prefix_cache.match_pages(q.prompt)
+        n = min(len(dp), len(rp))
+        if not n:
+            continue
+        a, b = page_bytes(pe, dp[:n]), page_bytes(de, rp[:n])
+        assert (a == b).all(), \
+            f"migrated pages for rid {q.rid} are not bit-equal"
+        n_compared += n
+    assert n_compared > 0, "no migrated pages left to compare"
+
+    # -- gate 4: modeled TBT under interference ----------------------------
+    costs_single = modeled_tbt_costs(single_sink.of_kind("serve_tick"))
+    disagg_ticks = de_sink.of_kind("serve_tick")
+    costs_disagg = modeled_tbt_costs(disagg_ticks)
+    assert all(int(r.get("chunk", 0)) == 0 for r in disagg_ticks), \
+        "decode tier ran a prefill chunk (tier split is broken)"
+    p99_s = float(np.percentile(costs_single, 99))
+    p99_d = float(np.percentile(costs_disagg, 99))
+    mean_s, mean_d = float(costs_single.mean()), float(costs_disagg.mean())
+    ratio = p99_s / max(p99_d, 1e-9)
+    assert ratio >= TBT_P99_IMPROVEMENT_MIN, \
+        (f"modeled p99 TBT improvement {ratio:.2f}x < "
+         f"{TBT_P99_IMPROVEMENT_MIN}x (single {p99_s:.1f} vs disagg "
+         f"{p99_d:.1f} cost units)")
+
+    emit("disagg/modeled_p99_tbt_ratio", ratio,
+         derived=f"{p99_s:.1f} -> {p99_d:.1f} cost units/token",
+         units="x", kind="modeled")
+    emit("disagg/modeled_mean_tbt_ratio", mean_s / max(mean_d, 1e-9),
+         derived=f"{mean_s:.2f} -> {mean_d:.2f} cost units/token",
+         units="x", kind="modeled")
+    emit("disagg/kv_transfer_bytes", dstats["kv_transfer_bytes"],
+         derived=f"{dstats['migrations']} migrations, "
+                 f"{dstats['shipped_pages']} pages shipped",
+         units="bytes", kind="measured")
+
+    # -- gate 5: a tiny transfer budget throttles but never starves --------
+    pe2, _ = engine("prefill")
+    de2, _ = engine("decode")
+    one_batch = pe2.codec.bytes_for(1)      # every cycle: ~one page batch
+    router2 = DisaggRouter([pe2], [de2],
+                           dcfg=DisaggConfig(transfer_budget_bytes=one_batch))
+    reqs3 = trace()
+    res3 = router2.run(reqs3, realtime=False)
+    toks3 = [res3[q.rid]["tokens"] for q in reqs3]
+    assert toks3 == toks1, "budget-throttled fleet diverged bitwise"
+    d2 = router2.stats()["disagg"]
+    assert d2["migrations"] == n_requests, \
+        "transfer budget starved the handoff queue"
+    emit("disagg/budget_deferrals", d2["budget_deferrals"],
+         derived=f"budget={one_batch}B/cycle", units="count",
+         kind="measured")
+
+    if dry_run:
+        print(f"disagg_ab: dry-run OK ({n_requests}/{n_requests} requests "
+              f"bitwise disagg==single, casting-free codec, "
+              f"{dstats['migrations']} migrations "
+              f"({dstats['kv_transfer_bytes']}B wire, "
+              f"{n_compared} pages bit-verified), modeled p99 TBT "
+              f"{ratio:.2f}x better under interference)")
+        return
+
+    # -- timed: wall-clock per-token TBT -----------------------------------
+    emit("disagg/makespan_single_s", dt_single, units="s")
+    emit("disagg/makespan_disagg_s", dt_disagg, units="s")
+    for name, e in (("single", single), ("disagg_decode", de)):
+        h = e.tel.registry.histogram("serve_tbt_ms")
+        emit(f"disagg/p99_tbt_wall_{name}_ms", h.quantile(0.99), units="ms")
+    print(f"disagg_ab: modeled p99 TBT {ratio:.2f}x better "
+          f"({p99_s:.1f} -> {p99_d:.1f} cost units), "
+          f"{dstats['migrations']} migrations "
+          f"{dstats['kv_transfer_bytes'] / 2**10:.1f} KiB wire, "
+          f"makespan {dt_single:.2f}s -> {dt_disagg:.2f}s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="structural gates only (CI): bitwise parity disagg "
+                         "vs single-tier, casting-free codec assert, "
+                         "migrated-page bit-equality, modeled TBT-"
+                         "interference reduction, budget no-starvation")
+    args = ap.parse_args()
+    run(dry_run=args.dry_run)

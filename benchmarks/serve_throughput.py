@@ -21,6 +21,13 @@ own fixed system prompt, every request = tenant prefix + unique tail — the
 workload the radix prefix cache targets.  --compare-prefix-cache runs the
 same trace cache-on vs cache-off so the hit-rate -> TTFT effect is measured.
 
+--preset decode_heavy (short prompts, long generations) and
+--preset mixed_interference (decode-heavy foreground + periodic long-prompt
+prefills) target the time-between-tokens TAIL: every run also reports
+per-token p50/p99 TBT from the engine's serve_tbt_ms histogram, which is
+what the prefill/decode disaggregation A/B (benchmarks/disagg_ab.py)
+improves under interference.
+
 Every result row also flows through benchmarks/common.emit(), so with
 REPRO_BENCH_JSONL set the per-request TTFT percentiles, throughput, and
 cache-hit-rate land in the unified bench JSONL stream the obs reporter
@@ -32,6 +39,8 @@ batch-mix churn are exercised for real (max concurrent < #requests).
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
@@ -79,7 +88,65 @@ def make_shared_prefix_trace(n_requests: int, rate_hz: float, seed: int,
     return reqs
 
 
+def make_decode_heavy_trace(n_requests: int, rate_hz: float, seed: int,
+                            vocab: int, max_prompt: int = 6,
+                            min_new: int = 12, max_new: int = 20):
+    """Short prompts, long generations — the TBT-dominated regime (chat
+    turns): per-request cost is almost entirely decode ticks, so the
+    time-between-tokens tail IS the user experience."""
+    from repro.serve.scheduler import Request
+    r = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for _ in range(n_requests):
+        t += float(r.exponential(1.0 / rate_hz))
+        reqs.append(Request(
+            prompt=list(r.integers(1, vocab, int(r.integers(3,
+                                                            max_prompt + 1)))),
+            max_new_tokens=int(r.integers(min_new, max_new + 1)),
+            arrival_time=t))
+    return reqs
+
+
+def make_mixed_interference_trace(n_requests: int, rate_hz: float, seed: int,
+                                  vocab: int, long_every: int = 4,
+                                  long_prompt: int = 48, max_prompt: int = 6,
+                                  min_new: int = 12, max_new: int = 20):
+    """Decode-heavy foreground + periodic LONG-prompt interferers (every
+    `long_every`-th arrival carries a `long_prompt`-token prompt with a
+    short generation).  In a mixed engine each interferer's prefill chunks
+    ride the same ticks as resident decodes, dragging the TBT tail — the
+    exact pathology prefill/decode disaggregation removes, and what the
+    disagg A/B measures."""
+    from repro.serve.scheduler import Request
+    r = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(r.exponential(1.0 / rate_hz))
+        if long_every and i % long_every == long_every - 1:
+            reqs.append(Request(
+                prompt=list(r.integers(1, vocab, long_prompt)),
+                max_new_tokens=int(r.integers(2, 5)),
+                arrival_time=t))
+        else:
+            reqs.append(Request(
+                prompt=list(r.integers(1, vocab,
+                                       int(r.integers(3, max_prompt + 1)))),
+                max_new_tokens=int(r.integers(min_new, max_new + 1)),
+                arrival_time=t))
+    return reqs
+
+
 def build_trace(args, vocab):
+    preset = getattr(args, "preset", "poisson")
+    if preset == "decode_heavy":
+        return make_decode_heavy_trace(args.requests, args.rate, args.seed,
+                                       vocab)
+    if preset == "mixed_interference":
+        return make_mixed_interference_trace(
+            args.requests, args.rate, args.seed, vocab,
+            long_every=args.long_every, long_prompt=args.long_prompt)
     if args.shared_prefix:
         return make_shared_prefix_trace(
             args.requests, args.rate, args.seed, vocab,
@@ -92,7 +159,8 @@ def build_trace(args, vocab):
 def run_recipe(recipe_name: str, cfg, plan, params, args,
                prefill_chunk=None, prefix_cache=False):
     from repro.core.recipes import get_recipe
-    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.obs.sink import Telemetry
+    from repro.serve.engine import _LAT_BUCKETS, ServeConfig, ServeEngine
 
     recipe = get_recipe(recipe_name)
     fp8 = recipe.name == "fp8_flow"
@@ -102,7 +170,11 @@ def run_recipe(recipe_name: str, cfg, plan, params, args,
         token_budget=args.token_budget, prefill_buckets=(16, 32, 64),
         prefill_chunk=prefill_chunk, fp8_kv=fp8, w8_weights=fp8,
         prefix_cache=prefix_cache, seed=0)
-    eng = ServeEngine(cfg, recipe, plan, params, ecfg)
+    # sink-less telemetry: the registry's serve_tbt_ms histogram gives the
+    # per-TOKEN inter-token percentiles (request means hide the tail the
+    # decode-heavy presets exist to expose)
+    tel = Telemetry(sinks=())
+    eng = ServeEngine(cfg, recipe, plan, params, ecfg, telemetry=tel)
     reqs = build_trace(args, cfg.vocab)
     assert len(reqs) > ecfg.max_batch, "trace must oversubscribe the batch"
     total_prompt = sum(len(q.prompt) for q in reqs)
@@ -116,8 +188,12 @@ def run_recipe(recipe_name: str, cfg, plan, params, args,
                       for v in results.values()])
     n_tok = sum(len(v["tokens"]) for v in results.values())
     hit_tokens = sum(v["cached_tokens"] for v in results.values())
+    tbt_hist = tel.registry.histogram("serve_tbt_ms", edges=_LAT_BUCKETS)
     return {
         "recipe": recipe_name,
+        "preset": getattr(args, "preset", "poisson"),
+        "p50_tbt_ms": tbt_hist.quantile(0.5),
+        "p99_tbt_ms": tbt_hist.quantile(0.99),
         "prefill": f"chunk{prefill_chunk}" if prefill_chunk else "mono",
         "cache": "on" if prefix_cache else "off",
         "finished": len(results),
@@ -148,6 +224,18 @@ def main():
     ap.add_argument("--token-budget", type=int, default=512)
     ap.add_argument("--closed-loop", action="store_true",
                     help="ignore arrival times (saturation throughput)")
+    ap.add_argument("--preset", default="poisson",
+                    choices=("poisson", "decode_heavy", "mixed_interference"),
+                    help="trace shape: poisson (uniform prompts), "
+                         "decode_heavy (short prompts / long generations — "
+                         "TBT-dominated), mixed_interference (decode-heavy "
+                         "foreground + periodic long prefills, the workload "
+                         "the disagg A/B measures TBT tails on)")
+    ap.add_argument("--long-every", type=int, default=4,
+                    help="mixed_interference: every Nth arrival is a long "
+                         "prefill interferer")
+    ap.add_argument("--long-prompt", type=int, default=48,
+                    help="mixed_interference: interferer prompt tokens")
     ap.add_argument("--recipes", default="fp8_flow,bf16")
     ap.add_argument("--max-prompt", type=int, default=24,
                     help="longest trace prompt (chunked prefill may exceed "
@@ -174,7 +262,12 @@ def main():
     args = ap.parse_args()
 
     import jax
-    from benchmarks.common import emit
+    try:
+        from benchmarks.common import emit
+    except ModuleNotFoundError:      # invoked as `python benchmarks/...py`
+        sys.path.insert(0, os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        from benchmarks.common import emit
     from repro.configs import get_arch
     from repro.launch.mesh import make_production_mesh, make_test_mesh
     from repro.launch.sharding import make_plan
@@ -190,22 +283,27 @@ def main():
         plan = make_plan(cfg, mesh)
     params = init_params(cfg, jax.random.key(0))
 
-    print("recipe,prefill,cache,finished,tok_s,p50_lat_s,p99_lat_s,"
-          "p50_ttft_s,p99_ttft_s,hit_rate,max_concurrent,kv_MiB")
+    print("recipe,preset,prefill,cache,finished,tok_s,p50_lat_s,p99_lat_s,"
+          "p50_ttft_s,p99_ttft_s,p50_tbt_ms,p99_tbt_ms,hit_rate,"
+          "max_concurrent,kv_MiB")
 
     def report(r):
-        print(f"{r['recipe']},{r['prefill']},{r['cache']},{r['finished']},"
-              f"{r['tok_s']:.1f},"
+        print(f"{r['recipe']},{r['preset']},{r['prefill']},{r['cache']},"
+              f"{r['finished']},{r['tok_s']:.1f},"
               f"{r['p50_lat']:.3f},{r['p99_lat']:.3f},"
               f"{r['p50_ttft']:.3f},{r['p99_ttft']:.3f},"
+              f"{r['p50_tbt_ms']:.2f},{r['p99_tbt_ms']:.2f},"
               f"{r['hit_rate']:.3f},"
               f"{r['max_concurrent']},{r['kv_bytes']/2**20:.1f}")
-        tag = f"serve/{r['recipe']}/{r['prefill']}/cache_{r['cache']}"
+        tag = f"serve/{r['recipe']}/{r['preset']}/{r['prefill']}" \
+              f"/cache_{r['cache']}"
         emit(f"{tag}/tok_s", r["tok_s"], units="tok/s")
         emit(f"{tag}/mean_ttft_ms", r["mean_ttft"] * 1e3, units="ms")
         emit(f"{tag}/p50_ttft_ms", r["p50_ttft"] * 1e3, units="ms")
         emit(f"{tag}/p99_ttft_ms", r["p99_ttft"] * 1e3, units="ms")
         emit(f"{tag}/p99_lat_ms", r["p99_lat"] * 1e3, units="ms")
+        emit(f"{tag}/p50_tbt_ms", r["p50_tbt_ms"], units="ms")
+        emit(f"{tag}/p99_tbt_ms", r["p99_tbt_ms"], units="ms")
         emit(f"{tag}/cache_hit_rate", r["hit_rate"],
              derived=f"{r['finished']} reqs", units="frac")
 

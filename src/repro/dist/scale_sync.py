@@ -52,6 +52,24 @@ def exp_i8_to_scale(exp: jax.Array) -> jax.Array:
     return jnp.ldexp(jnp.float32(1.0), exp.astype(jnp.int32))
 
 
+def scale_to_exp_i8_bits(scale: jax.Array) -> jax.Array:
+    """Pure-bit spelling of ``scale_to_exp_i8``: a po2 scale s = 2^e has f32
+    bits (e+127) << 23 (sign 0, mantissa 0), so the exponent is a shift and
+    a bias subtract — NO floating-point arithmetic at all.  Value-identical
+    to the frexp form for every exponent po2_scale can produce (|e| <= 126,
+    property-tested); used on casting-free paths (the KV-page migration
+    wire) whose jaxpr must contain zero float ops."""
+    bits = jax.lax.bitcast_convert_type(scale, jnp.uint32)
+    return ((bits >> 23).astype(jnp.int32) - 127).astype(jnp.int8)
+
+
+def exp_i8_to_scale_bits(exp: jax.Array) -> jax.Array:
+    """Inverse of ``scale_to_exp_i8_bits`` by bit construction — value-
+    identical to ``exp_i8_to_scale`` (ldexp) but float-op-free."""
+    bits = ((exp.astype(jnp.int32) + 127) << 23).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
 def wire_anomaly(exp: jax.Array, payload: jax.Array, axis_name,
                  exp_limit: int) -> jax.Array:
     """Wire guard predicate, evaluated on the RECEIVED message before the

@@ -42,6 +42,16 @@ def main():
                     help="radix prefix cache: shared page-aligned prompt "
                          "prefixes are quantized+prefilled once and reused "
                          "across requests (refcounted FP8 KV pages)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="prefill/decode disaggregation: a two-tier fleet "
+                         "(prefill replicas park finished prefills; KV pages "
+                         "migrate bit-for-bit to decode replicas under a "
+                         "transfer-bytes budget)")
+    ap.add_argument("--prefill-replicas", type=int, default=1)
+    ap.add_argument("--decode-replicas", type=int, default=1)
+    ap.add_argument("--transfer-budget", type=int, default=1 << 20,
+                    metavar="BYTES",
+                    help="KV migration wire bytes per router drain cycle")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--bf16-kv", action="store_true")
     ap.add_argument("--no-w8", action="store_true")
@@ -83,7 +93,27 @@ def main():
         tel = Telemetry(sinks=sinks)
     else:
         tel = null_telemetry()
-    engine = ServeEngine(cfg, recipe, plan, params, ecfg, telemetry=tel)
+    if args.disagg:
+        import dataclasses as _dc
+        from repro.serve.router import DisaggConfig, DisaggRouter
+        pes = [ServeEngine(cfg, recipe, plan, params,
+                           _dc.replace(ecfg, role="prefill", seed=ecfg.seed),
+                           telemetry=tel)
+               for _ in range(args.prefill_replicas)]
+        des = [ServeEngine(cfg, recipe, plan, params,
+                           _dc.replace(ecfg, role="decode", seed=ecfg.seed),
+                           telemetry=tel)
+               for _ in range(args.decode_replicas)]
+        runner = DisaggRouter(
+            pes, des, dcfg=DisaggConfig(
+                transfer_budget_bytes=args.transfer_budget), telemetry=tel)
+        engine = pes[0]
+        print(f"[serve] disaggregated fleet: {len(pes)} prefill + "
+              f"{len(des)} decode replicas, transfer budget "
+              f"{args.transfer_budget / 2**20:.2f} MiB/cycle")
+    else:
+        engine = ServeEngine(cfg, recipe, plan, params, ecfg, telemetry=tel)
+        runner = engine
     print(f"[serve] {args.arch} recipe={recipe.name} "
           f"kv={'fp8' if ecfg.fp8_kv else 'bf16'} "
           f"w8={ecfg.w8_weights} pool={engine.kv_bytes()/2**20:.1f} MiB")
@@ -95,7 +125,7 @@ def main():
                     temperature=args.temperature)
             for _ in range(args.requests)]
     t0 = time.perf_counter()
-    results = engine.run(reqs, realtime=False)
+    results = runner.run(reqs, realtime=False)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v["tokens"]) for v in results.values())
     print(f"[serve] {len(results)}/{args.requests} requests, {n_tok} tokens "
@@ -106,6 +136,14 @@ def main():
           f"evicted={s['evicted']} finished={s['finished']} "
           f"prefill_chunks={s['prefill_chunks']} "
           f"decode_tokens={s['decode_tokens']}")
+    if args.disagg:
+        d = s["disagg"]
+        print(f"[serve] disagg: migrations={d['migrations']} "
+              f"wire={d['kv_transfer_bytes'] / 2**20:.2f} MiB "
+              f"shipped_pages={d['shipped_pages']} "
+              f"deduped_pages={d['deduped_pages']} "
+              f"requeued={d['requeued_evictions']} "
+              f"deferrals={d['budget_deferrals']}")
     if args.prefix_cache:
         total_prompt = sum(len(q.prompt) for q in reqs)
         print(f"[serve] prefix cache: hits={s['prefix_hits']}/"

@@ -190,6 +190,47 @@ def render_serve(kinds, out):
                                           for k, v in sorted(c.items())))
 
 
+def render_disagg(kinds, out):
+    migs = kinds.get("migration", [])
+    summ = kinds.get("disagg_summary", [])
+    out(f"== disaggregation: {len(migs)} KV migrations ==")
+    if migs:
+        bts = [r.get("bytes", 0) for r in migs]
+        out(f"  wire: {sum(bts) / 2**20:.2f} MiB total, "
+            f"mean {sum(bts)/len(bts)/2**10:.1f} KiB/migration")
+        shipped = sum(r.get("shipped_pages", 0) for r in migs)
+        dedup = sum(r.get("deduped_pages", 0) for r in migs)
+        if shipped + dedup:
+            out(f"  pages: {shipped} shipped, {dedup} deduped against "
+                f"receiver caches "
+                f"({100.0 * dedup / (shipped + dedup):.1f}% not re-sent)")
+        q = [r["queue_ms"] for r in migs if "queue_ms" in r]
+        if q:
+            out(f"  handoff queue {_fmt_ms(_stats(q))}")
+        ms = [r["ms"] for r in migs if "ms" in r]
+        if ms:
+            out(f"  migration    {_fmt_ms(_stats(ms))}")
+        # per-tier placement: who donated, who received
+        for key, label in (("donor", "prefill tier"),
+                           ("receiver", "decode tier")):
+            per: Dict[int, int] = {}
+            for r in migs:
+                per[r.get(key, -1)] = per.get(r.get(key, -1), 0) + 1
+            parts = " ".join(f"r{idx}:{n}" for idx, n in sorted(per.items()))
+            out(f"  {label:<13s} {parts}")
+    for r in summ:
+        budget = r.get("transfer_budget_bytes", 0)
+        n_mig = max(r.get("migrations", 0), 1)
+        util = (r.get("kv_transfer_bytes", 0) / n_mig / budget) if budget \
+            else 0.0
+        out("  totals: " + " ".join(
+            f"{k}={int(v)}" for k, v in sorted(r.items())
+            if k not in ("t", "kind")))
+        out(f"  transfer budget: {budget / 2**20:.2f} MiB/cycle, mean "
+            f"utilization {100.0 * util:.1f}%/migration, "
+            f"{r.get('budget_deferrals', 0)} deferrals")
+
+
 def render_bench(recs, out):
     out(f"== benchmark records: {len(recs)} ==")
     out(f"  {'name':<36s} {'value':>14s} {'units':<8s} {'source':<9s} "
@@ -217,12 +258,15 @@ def render(recs, out=print) -> int:
                                 "serve_summary", "prefix_hit", "route",
                                 "router_summary")):
         render_serve(kinds, out)
+    if any(k in kinds for k in ("migration", "disagg_summary")):
+        render_disagg(kinds, out)
     if "bench" in kinds:
         render_bench(kinds["bench"], out)
     other = [k for k in kinds if k not in
              ("step", "guard", "cast_ledger", "wire_layout", "serve_tick",
               "request_done", "serve_summary", "prefix_hit", "route",
-              "router_summary", "bench", "registry")]
+              "router_summary", "migration", "disagg_summary", "bench",
+              "registry")]
     if other:
         out("== other records ==")
         for k in sorted(other):

@@ -95,6 +95,19 @@ class ServeConfig:
     top_k: int = 0                     # 0 -> full-vocab sampling
     eos_id: Optional[int] = None
     seed: int = 0
+    role: str = "mixed"                # disaggregation tier:
+                                       #   "mixed"   — classic engine (prefill
+                                       #               + decode interleaved)
+                                       #   "prefill" — admission + chunked
+                                       #               prefill only; finished
+                                       #               prefills PARK in the
+                                       #               handoff queue for KV
+                                       #               migration to a decode
+                                       #               replica
+                                       #   "decode"  — no admission; requests
+                                       #               arrive pre-filled via
+                                       #               the adopt path and run
+                                       #               the masked decode batch
 
     @property
     def max_len(self) -> int:
@@ -159,6 +172,8 @@ class ServeEngine:
                  params, ecfg: ServeConfig = ServeConfig(), telemetry=None):
         self.cfg, self.recipe, self.plan, self.ecfg = cfg, recipe, plan, ecfg
         self.tel = telemetry if telemetry is not None else null_telemetry()
+        if ecfg.role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown role {ecfg.role!r}")
         if ecfg.prefill_chunk is not None and (
                 ecfg.prefill_chunk < 1
                 or ecfg.prefill_chunk > max(ecfg.prefill_buckets)):
@@ -189,6 +204,21 @@ class ServeEngine:
         self.total_decoded = 0
         self.n_rejected = 0
         self.n_prefill_chunks = 0
+        self.n_migrated_out = 0
+        # prefill tier: states whose prefill completed this/earlier ticks,
+        # parked (slot/pages/budget held) until the router migrates their KV
+        # to a decode replica and the receiver acks
+        self.handoff: deque = deque()
+        self._codec = None
+
+    @property
+    def codec(self):
+        """KV page transfer codec for this engine's pool geometry (lazy —
+        only disaggregated fleets pay for tracing it)."""
+        if self._codec is None:
+            from repro.serve.transfer import KVTransferCodec
+            self._codec = KVTransferCodec(self.pools)
+        return self._codec
 
     # -- queue -------------------------------------------------------------
     def _reject(self, req: Request, msg: str):
@@ -201,6 +231,9 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         ecfg = self.ecfg
+        if ecfg.role == "decode":
+            self._reject(req, "decode-tier replica does not admit requests "
+                         "(route to the prefill tier; KV arrives via adopt)")
         P = len(req.prompt)
         if P < 1 or req.max_new_tokens < 1:
             self._reject(req, "empty prompt / zero max_new_tokens")
@@ -251,20 +284,24 @@ class ServeEngine:
         """One engine tick; returns True if any work ran."""
         ecfg, sched = self.ecfg, self.sched
 
-        # decode set: resident + prefilled, with page headroom (may evict)
+        # decode set: resident + prefilled, with page headroom (may evict).
+        # Parked states (prefill tier, awaiting migration) are excluded:
+        # their KV is frozen until the receiver copies it.
         for slot in sorted(sched.active):
             st = sched.active.get(slot)
-            if st is not None and st.prefilled:
+            if st is not None and st.prefilled and not st.parked:
                 self._grow_pages(st)
         decode_slots = [s for s in sorted(sched.active)
-                        if sched.active[s].prefilled]
+                        if sched.active[s].prefilled
+                        and not sched.active[s].parked]
 
         # decode-priority prefill work: at most one prefill CHUNK rides this
         # tick.  An in-flight chunked prefill continues before anything new
         # is admitted (it was admitted first — FCFS), so decode is never
-        # starved by more than one bounded chunk per tick.
-        pf = sched.mid_prefill()
-        if pf is None:
+        # starved by more than one bounded chunk per tick.  A decode-tier
+        # replica never prefills: its requests arrive pre-filled via adopt.
+        pf = sched.mid_prefill() if self.ecfg.role != "decode" else None
+        if pf is None and self.ecfg.role != "decode":
             pf = sched.try_admit(self.alloc, now,
                                  prefix_cache=self.prefix_cache)
             if pf is not None and pf.cached_tokens:
@@ -368,6 +405,15 @@ class ServeEngine:
                 # only the last chunk's logits are meaningful (the prompt's
                 # final position) — intermediate chunks just fill pages
                 self._emit(pf, int(out["prefill_tok"]), now, results)
+                if self.ecfg.role == "prefill" \
+                        and self.sched.active.get(pf.slot) is pf:
+                    # prefill tier: done here — park (slot/pages/budget stay
+                    # held so the KV survives) and queue for migration; the
+                    # router ships the pages to a decode replica and acks
+                    pf.parked = True
+                    self.handoff.append(pf)
+                    self.tel.gauge("handoff_queue_depth").set(
+                        len(self.handoff))
         if decode_slots:
             toks = out["decode_toks"]
             for s in decode_slots:
@@ -412,6 +458,108 @@ class ServeEngine:
                 "cached_tokens": st.cached_tokens,
             }
 
+    # -- disaggregation: casting-free KV migration -------------------------
+    # Two-phase protocol (router-orchestrated):
+    #   1. receiver.reserve_for_adopt(meta)  — pin locally-cached prompt
+    #      pages (incref) FIRST, then reserve fresh pages; all-or-nothing.
+    #   2. donor.pack_handoff(st, skip)      — bitcast-pack only the pages
+    #      the receiver lacks; receiver.commit_adopt scatters them in and
+    #      installs the RequestState into the decode batch.
+    #   3. donor.release_parked(st)          — ONLY after the receiver ack:
+    #      pages leave via the release funnel (cache pages stay shareable).
+    def pack_handoff(self, st: RequestState, skip_pages: int = 0):
+        """Donor: one uint8 wire message carrying ``st.pages[skip_pages:]``
+        (the receiver already holds bit-identical copies of the first
+        `skip_pages` — content-addressable po2 pages make that dedupe
+        sound) plus the request's resume metadata."""
+        from repro.serve.transfer import TransferMeta
+        ship = st.pages[skip_pages:]
+        meta = TransferMeta(rid=st.req.rid, n_pages=len(ship),
+                            page_size=self.ecfg.page_size,
+                            bytes_per_page=self.codec.bytes_per_page,
+                            pos=st.prefill_pos,
+                            max_new_tokens=st.req.max_new_tokens,
+                            temperature=st.req.temperature,
+                            prompt=tuple(st.req.prompt),
+                            generated=tuple(st.generated))
+        ctx = self.plan.mesh if self.plan.mesh is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            return self.codec.pack(self.pools, ship, meta)
+
+    def reserve_for_adopt(self, req):
+        """Receiver phase 1: returns (shared, fresh) page lists covering the
+        migrating prompt, or None if a slot / the token budget / the pool
+        cannot take it right now (the donor keeps the request parked and the
+        router retries).  `req` is anything with .prompt/.max_new_tokens (a
+        Request or a TransferMeta).  Locally-cached blocks are pinned by
+        incref BEFORE the fresh tail allocates — the tail alloc may evict
+        cache leaves, and a bare cache ref would make the match itself a
+        victim (same ordering as try_admit)."""
+        sched, ecfg = self.sched, self.ecfg
+        if not sched._free_slots:
+            return None
+        P = len(req.prompt)
+        n_total = self.alloc.pages_for(P)
+        shared = (self.prefix_cache.match_pages(req.prompt)
+                  if self.prefix_cache is not None else [])[:n_total]
+        cached = len(shared) * ecfg.page_size
+        if sched.reserved_tokens + P + req.max_new_tokens - cached \
+                > sched.token_budget:
+            return None
+        self.alloc.incref(shared)
+        n_fresh = n_total - len(shared)
+        fresh = (self._alloc_pages(n_fresh) or None) if n_fresh else []
+        if fresh is None:
+            self.alloc.decref(shared)
+            return None
+        return shared, fresh
+
+    def abort_adopt(self, shared, fresh) -> None:
+        """Receiver: roll phase 1 back (decref pins, free fresh pages)."""
+        self.alloc.decref(list(shared) + list(fresh))
+
+    def commit_adopt(self, meta, payload, shared, fresh, now: float,
+                     timing: Optional[dict] = None) -> RequestState:
+        """Receiver phase 2: scatter the shipped page bytes into the fresh
+        pages (pure bitcast — the pages land bit-identical to the donor's),
+        rebuild the RequestState at the request's `pos`, install it in the
+        decode batch, and publish the prompt prefix into the local radix
+        tree so later migrations/admissions of the same tenant re-share
+        these pages."""
+        if fresh:
+            ctx = self.plan.mesh if self.plan.mesh is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                self.pools = self.codec.scatter(self.pools, payload, fresh)
+        timing = timing or {}
+        req = Request(prompt=list(meta.prompt),
+                      max_new_tokens=meta.max_new_tokens,
+                      arrival_time=timing.get("arrival", now),
+                      temperature=meta.temperature, rid=meta.rid)
+        st = RequestState(req=req, slot=-1, pages=list(shared) + list(fresh),
+                          admit_seq=-1, admit_time=timing.get("admit", now),
+                          generated=list(meta.generated),
+                          first_token_time=timing.get("first"),
+                          last_token_time=timing.get("last"),
+                          prefilled=True, prefill_pos=meta.pos,
+                          cached_tokens=len(shared) * self.ecfg.page_size,
+                          n_shared_pages=len(shared))
+        self.sched.adopt(st)
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(meta.prompt, st.pages, self.alloc)
+        return st
+
+    def release_parked(self, st: RequestState) -> None:
+        """Donor phase 3 (post-ack): the parked request's slot, budget and
+        pages are released through the scheduler funnel — with a prefix
+        cache the prompt pages stay resident for future local hits, so
+        migrating a tenant does not evict its prefix from the prefill
+        tier."""
+        st.parked = False
+        self.sched.release(st, self.alloc)
+        self.n_migrated_out += 1
+
     # -- driver ------------------------------------------------------------
     def run(self, requests: Sequence[Request],
             realtime: bool = True) -> Dict[int, dict]:
@@ -453,7 +601,10 @@ class ServeEngine:
                "rejected": self.n_rejected,
                "prefill_chunks": self.n_prefill_chunks,
                "decode_tokens": self.total_decoded,
-               "max_concurrent": self.max_concurrent}
+               "max_concurrent": self.max_concurrent,
+               "adopted": s["adopted"],
+               "migrated_out": self.n_migrated_out,
+               "role": self.ecfg.role}
         if self.prefix_cache is not None:
             out.update(self.prefix_cache.stats())
         return out

@@ -153,6 +153,18 @@ class PrefixCache:
             return None
         return PrefixMatch(pages=list(pages), tokens=matched, cow=cow)
 
+    def match_pages(self, tokens: Sequence[int]) -> List[int]:
+        """Cached pages covering `tokens`' longest full-block prefix, with
+        NO cow capping and no hit accounting (LRU clocks are refreshed —
+        the pages are about to be pinned).  The disaggregation adopt path
+        uses this to dedupe a migration against the RECEIVER's cache: any
+        block the receiver already holds is shared by incref instead of
+        shipped over the wire, and because po2-quantized pages are
+        content-addressable the local page is bit-identical to the one the
+        donor would have sent."""
+        _, _, pages, _ = self._walk(self._blocks(tokens), touch=True)
+        return list(pages)
+
     def record_admitted(self, match: Optional[PrefixMatch]) -> None:
         """Per-request hit accounting, called once per successful
         admission (with match=None for a miss)."""

@@ -78,6 +78,12 @@ class RequestState:
                                    # (read-only; the request must not write)
     cow_page: Optional[tuple] = None  # (src, dst): boundary page to copy
                                    # before this request's first chunk runs
+    parked: bool = False           # prefill-tier disaggregation: prefill is
+                                   # complete and the request sits in the
+                                   # handoff queue awaiting KV migration; it
+                                   # keeps its slot/pages/budget (the KV must
+                                   # survive until the receiver acks) but is
+                                   # excluded from decode and from eviction
 
     @property
     def next_pos(self) -> int:
@@ -114,6 +120,7 @@ class Scheduler:
         self.n_finished = 0
         self.n_evictions = 0
         self.n_admitted = 0
+        self.n_adopted = 0                             # disagg: migrated in
         self.cached_prompt_tokens = 0                  # prefix-cache skips
         self._eviction_counts: Dict[int, int] = {}     # rid -> times evicted
 
@@ -139,7 +146,7 @@ class Scheduler:
         run-level stats and the obs registry)."""
         return {"admitted": self.n_admitted, "evicted": self.n_evictions,
                 "finished": self.n_finished, "waiting": len(self.waiting),
-                "active": self.n_active}
+                "active": self.n_active, "adopted": self.n_adopted}
 
     def mid_prefill(self) -> Optional[RequestState]:
         """The resident whose chunked prefill is still in flight, if any.
@@ -223,11 +230,15 @@ class Scheduler:
         The oldest resident is therefore never unseated, which guarantees
         forward progress (no evict-each-other livelock between two growing
         requests).  ``requester=None`` evicts the globally youngest.
-        Returns the evicted state, or None if nothing is resident."""
+        Parked residents (disaggregation handoff: prefill done, awaiting KV
+        migration) are never victims — losing their KV before the receiver
+        copies it would orphan the handoff.  Returns the evicted state, or
+        None if nothing is resident."""
+        live = [st for st in self.active.values() if not st.parked]
         if requester is None:
-            victims = list(self.active.values())
+            victims = live
         else:
-            victims = [st for st in self.active.values()
+            victims = [st for st in live
                        if st.admit_seq > requester.admit_seq] or [requester]
         if not victims:
             return None
@@ -252,6 +263,28 @@ class Scheduler:
         self._release(st, allocator)
         self.n_finished += 1
         return st
+
+    # -- disaggregation (prefill/decode handoff) ---------------------------
+    def adopt(self, st: RequestState) -> None:
+        """Install a migrated RequestState (pages already reserved/written by
+        the engine's adopt path) into a free slot on the DECODE tier.  The
+        state arrives with prefill complete; it joins the masked decode batch
+        on the next tick.  Budget accounting is the same worst-case
+        reservation as try_admit — the router only migrates when it fits."""
+        if not self._free_slots:
+            raise RuntimeError("adopt with no free slot (router must check)")
+        st.slot = self._free_slots.pop()
+        st.admit_seq = next(self._admit_seq)
+        st.parked = False
+        self.active[st.slot] = st
+        self.n_adopted += 1
+
+    def release(self, st: RequestState, allocator: PageAllocator) -> None:
+        """Public release for the donor side of a migration: after the
+        receiver acks, the parked state's pages leave through the SAME
+        release funnel as finish/evict (so the prefix cache sees the decref
+        and cached pages stay shareable for future local hits)."""
+        self._release(st, allocator)
 
     def _release(self, st: RequestState, allocator: PageAllocator) -> None:
         """The ONLY place a resident's pages leave the scheduler — both

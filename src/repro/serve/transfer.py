@@ -1,0 +1,270 @@
+"""Casting-free KV page migration: the wire codec for prefill/decode
+disaggregation.
+
+The paged KV cache stores e4m3 payloads + per-row po2 scales, which makes a
+page the cheapest possible — and *casting-free* — wire format for moving a
+request between replicas: migration is a pure BITCAST of what is already in
+the pool.  The codec packs, per page batch, for every (stack, k/v) pool:
+
+  * the e4m3 payload bytes verbatim (``bitcast_convert_type`` to uint8), and
+  * the f32 po2 scales as int8 exponents via the ``dist/scale_sync`` bit
+    codec (``scale_to_exp_i8_bits`` — shift/bias on the f32 bit pattern,
+    value-identical to the frexp/ldexp wire codec of the DP gradient wire),
+
+into ONE uint8 message (host header + device payload).  Unpacking on the
+receiver bitcasts straight back into its pool, so a migrated page is
+bit-for-bit the donor's page: zero quantize/dequantize ops ride the
+migration path.  That is not just asserted on values — ``assert_casting_free``
+walks the codec's jaxprs and proves NO floating-point-typed primitive other
+than pure data movement (gather/scatter/bitcast/reshape/...) exists, which
+is exactly the casting-free property the paper's recipe gives the training
+dataflow, applied to the serving wire (FP8-LM makes the same observation for
+gradient traffic: FP8 payload + pre-agreed scales halve the wire with zero
+re-quantization).
+
+Page batches are padded to a power-of-two bucket (scratch-page rows — never
+read back) so the fleet compiles O(log max_pages) gather/scatter programs,
+mirroring the engine's prefill buckets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.scale_sync import exp_i8_to_scale_bits, scale_to_exp_i8_bits
+from repro.serve.paged_kv import SCRATCH_PAGE
+
+_MAGIC = 0x4B56_5747          # "KVWG": KV wire, guarded by a header check
+_VERSION = 1
+
+# Primitives that may touch floating-point-typed values inside the codec:
+# pure data movement.  Anything numeric (div/mul of a quantize, convert of a
+# cast, reduce_max of an amax pass) is absent from this set, so the
+# casting-free assert below is structural, not statistical.
+_DATA_MOVEMENT = frozenset({
+    "gather", "scatter", "slice", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "reshape", "broadcast_in_dim", "transpose", "squeeze",
+    "bitcast_convert_type", "copy", "rev", "pad",
+})
+
+
+def _is_int_like(dt) -> bool:
+    dt = jnp.dtype(dt)
+    return jnp.issubdtype(dt, jnp.integer) or dt == jnp.dtype(jnp.bool_)
+
+
+def _walk_eqns(jaxpr, visit):
+    for eqn in jaxpr.eqns:
+        visit(eqn)
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                inner = v.jaxpr
+                _walk_eqns(getattr(inner, "jaxpr", inner), visit)
+
+
+def check_casting_free(jaxpr) -> None:
+    """Raise AssertionError if `jaxpr` contains any primitive that performs
+    numeric work on a floating-point-typed value.  Floats (f32 scales, e4m3
+    payloads, bf16 pools) may only flow through data-movement primitives;
+    ``convert_element_type`` is only allowed between integer types (the
+    exponent bias arithmetic) — so no quantize (div + convert-to-fp8) and no
+    dequantize (convert-from-fp8 + mul) can hide anywhere in the codec."""
+    def visit(eqn):
+        dts = [v.aval.dtype for v in list(eqn.invars) + list(eqn.outvars)
+               if hasattr(v, "aval") and hasattr(v.aval, "dtype")]
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            assert all(_is_int_like(d) for d in dts), \
+                f"codec is not casting-free: convert_element_type on {dts}"
+            return
+        if any(not _is_int_like(d) for d in dts):
+            assert name in _DATA_MOVEMENT, \
+                f"codec is not casting-free: float-typed `{name}`"
+    _walk_eqns(jaxpr, visit)
+
+
+def _u8(x: jax.Array) -> jax.Array:
+    """Bitcast to uint8; multi-byte dtypes grow a trailing byte axis that is
+    folded into the last dim (same idiom as the DP gradient wire)."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    if u.ndim == x.ndim:
+        return u
+    return u.reshape(*x.shape[:-1], -1)
+
+
+def _bucket(n: int) -> int:
+    """Next power-of-two page-batch bucket (0 stays 0)."""
+    return 1 << max(0, n - 1).bit_length() if n else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferMeta:
+    """Per-migration header fields (ride the wire as int32 words).  The
+    prompt tokens ARE the radix identity: the receiver re-shares the shipped
+    pages by inserting the prompt's full-block prefix into its own radix
+    tree, so later migrations of the same tenant dedupe against them."""
+    rid: int
+    n_pages: int                  # REAL page count (<= the padded bucket)
+    page_size: int
+    bytes_per_page: int           # geometry fingerprint (fleet must agree)
+    pos: int                      # tokens prefilled (== len(prompt))
+    max_new_tokens: int
+    temperature: float            # rides the wire as raw f32 bits
+    prompt: Tuple[int, ...]
+    generated: Tuple[int, ...]    # tokens sampled so far (the prefill token)
+
+    _N_HEAD = 11                  # header words before the token arrays
+
+    def to_bytes(self) -> np.ndarray:
+        tbits = int(np.float32(self.temperature).view(np.int32))
+        head = np.array([_MAGIC, _VERSION, self.rid, self.n_pages,
+                         self.page_size, self.bytes_per_page, self.pos,
+                         self.max_new_tokens, tbits,
+                         len(self.prompt), len(self.generated)], np.int32)
+        words = np.concatenate([head,
+                                np.asarray(self.prompt, np.int32),
+                                np.asarray(self.generated, np.int32)])
+        return words.view(np.uint8)
+
+    @classmethod
+    def from_bytes(cls, msg: np.ndarray) -> Tuple["TransferMeta", int]:
+        """Parse a packed message's header; returns (meta, payload offset)."""
+        nh = cls._N_HEAD
+        head = msg[:nh * 4].view(np.int32)
+        if int(head[0]) != _MAGIC or int(head[1]) != _VERSION:
+            raise ValueError("not a KV transfer message (bad magic/version)")
+        n_prompt, n_gen = int(head[9]), int(head[10])
+        off = (nh + n_prompt + n_gen) * 4
+        words = msg[nh * 4:off].view(np.int32)
+        return cls(rid=int(head[2]), n_pages=int(head[3]),
+                   page_size=int(head[4]), bytes_per_page=int(head[5]),
+                   pos=int(head[6]), max_new_tokens=int(head[7]),
+                   temperature=float(np.int32(int(head[8])).view(np.float32)),
+                   prompt=tuple(int(t) for t in words[:n_prompt]),
+                   generated=tuple(int(t) for t in words[n_prompt:])), off
+
+
+class KVTransferCodec:
+    """Bitcast pack/unpack of KV pages for one pool geometry.
+
+    Built from a pools pytree (donor and receiver must share geometry — the
+    ``bytes_per_page`` fingerprint in the header is checked on adopt).  The
+    device work is two jitted programs per page-batch bucket: a gather that
+    flattens the selected pages of every (stack, k/v) pool into one uint8
+    vector, and a scatter (pools donated) that writes received bytes into
+    the receiver's reserved pages.  Both are float-op-free by construction;
+    ``assert_casting_free`` proves it on the traced jaxprs.
+    """
+
+    def __init__(self, pools):
+        self.parts: List[Tuple[str, str, bool, object, int, int, int, int]] \
+            = []
+        page_size = None
+        for stack in sorted(pools):
+            for kv in ("k", "v"):
+                p = pools[stack][kv]
+                L, _, ps, KV, hd = p["data"].shape
+                self.parts.append((stack, kv, "scale" in p,
+                                   jnp.dtype(p["data"].dtype), L, ps, KV, hd))
+                page_size = ps
+        if page_size is None:
+            raise ValueError("empty pools")
+        self.page_size = page_size
+        self.bytes_per_page = sum(
+            L * ps * KV * (hd * dt.itemsize + (1 if has_scale else 0))
+            for (_, _, has_scale, dt, L, ps, KV, hd) in self.parts)
+        self._gather = jax.jit(self._gather_impl)
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+
+    # -- device programs (pure bitcast + data movement) --------------------
+    def _gather_impl(self, pools, ids: jax.Array) -> jax.Array:
+        out = []
+        for (stack, kv, has_scale, _, _, _, _, _) in self.parts:
+            p = pools[stack][kv]
+            out.append(_u8(p["data"][:, ids]).reshape(-1))
+            if has_scale:
+                exp = scale_to_exp_i8_bits(p["scale"][:, ids])
+                out.append(_u8(exp).reshape(-1))
+        return jnp.concatenate(out)
+
+    def _scatter_impl(self, pools, payload: jax.Array,
+                      ids: jax.Array) -> Dict:
+        n = ids.shape[0]
+        pools = jax.tree.map(lambda x: x, pools)   # shallow rebuild
+        off = 0
+        for (stack, kv, has_scale, dt, L, ps, KV, hd) in self.parts:
+            p = dict(pools[stack][kv])
+            nb = L * n * ps * KV * hd * dt.itemsize
+            raw = payload[off:off + nb]
+            off += nb
+            if dt.itemsize == 1:
+                vals = jax.lax.bitcast_convert_type(
+                    raw.reshape(L, n, ps, KV, hd), dt)
+            else:
+                vals = jax.lax.bitcast_convert_type(
+                    raw.reshape(L, n, ps, KV, hd, dt.itemsize), dt)
+            p["data"] = p["data"].at[:, ids].set(vals)
+            if has_scale:
+                nbs = L * n * ps * KV
+                exp = jax.lax.bitcast_convert_type(
+                    payload[off:off + nbs].reshape(L, n, ps, KV, 1), jnp.int8)
+                off += nbs
+                p["scale"] = p["scale"].at[:, ids].set(
+                    exp_i8_to_scale_bits(exp))
+            pools[stack][kv] = p
+        return pools
+
+    # -- host API ----------------------------------------------------------
+    def bytes_for(self, n_pages: int) -> int:
+        """Wire payload bytes for an n-page batch (bucket-padded, as
+        shipped; the transfer-bytes budget meters this)."""
+        return _bucket(n_pages) * self.bytes_per_page
+
+    def _pad_ids(self, page_ids: Sequence[int]) -> jnp.ndarray:
+        b = _bucket(len(page_ids))
+        ids = list(page_ids) + [SCRATCH_PAGE] * (b - len(page_ids))
+        return jnp.asarray(ids, jnp.int32)
+
+    def pack(self, pools, page_ids: Sequence[int],
+             meta: TransferMeta) -> np.ndarray:
+        """One uint8 message: header + bucket-padded page payload (padding
+        gathers the scratch page; the receiver's padding writes land back in
+        its own scratch page and are never read)."""
+        header = meta.to_bytes()
+        if not page_ids:
+            return np.asarray(header)
+        payload = np.asarray(self._gather(pools, self._pad_ids(page_ids)))
+        return np.concatenate([header, payload])
+
+    def unpack(self, msg: np.ndarray) -> Tuple[TransferMeta, np.ndarray]:
+        meta, off = TransferMeta.from_bytes(msg)
+        if meta.bytes_per_page != self.bytes_per_page:
+            raise ValueError(
+                f"pool geometry mismatch: message bytes/page "
+                f"{meta.bytes_per_page} != local {self.bytes_per_page}")
+        return meta, msg[off:]
+
+    def scatter(self, pools, payload: np.ndarray,
+                dst_ids: Sequence[int]):
+        """Write a received payload into `dst_ids` (REAL pages; padding up
+        to the bucket is scratch-directed).  Returns the updated pools."""
+        if not len(dst_ids):
+            return pools
+        return self._scatter(pools, jnp.asarray(payload),
+                             self._pad_ids(dst_ids))
+
+    # -- the zero-requantization proof -------------------------------------
+    def assert_casting_free(self, pools, n: int = 2) -> None:
+        """Trace both codec programs and assert their jaxprs contain zero
+        floating-point numeric ops (see check_casting_free) — migration can
+        not quantize, dequantize, or cast anything, by construction."""
+        ids = jnp.zeros((_bucket(n),), jnp.int32)
+        gj = jax.make_jaxpr(self._gather_impl)(pools, ids)
+        check_casting_free(gj.jaxpr)
+        payload = jnp.zeros((self.bytes_for(n),), jnp.uint8)
+        sj = jax.make_jaxpr(self._scatter_impl)(pools, payload, ids)
+        check_casting_free(sj.jaxpr)

@@ -1,0 +1,360 @@
+"""Casting-free KV migration (serve/transfer.py) and the disaggregated
+fleet's host-side protocol: bit-codec parity for po2 exponents, wire
+header round-trip, pack->unpack->scatter bitwise identity on fp8 AND bf16
+pools, the structural zero-requantization assert (with a quantizer as the
+negative control), scheduler park/adopt/release semantics, the router's
+saturated-fleet drain-progress guard, and the end-to-end bitwise guarantee
+that a 1-prefill + 1-decode fleet generates the same tokens as a
+single-tier engine while re-sharing migrated pages on the receiver."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.scale_sync import (exp_i8_to_scale, exp_i8_to_scale_bits,
+                                   scale_to_exp_i8, scale_to_exp_i8_bits)
+from repro.serve.paged_kv import PageAllocator
+from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.transfer import (KVTransferCodec, TransferMeta,
+                                  check_casting_free)
+from tests.conftest import make_mesh11
+
+
+# ---------------------------------------------------------------------------
+# Exponent bit codec == frexp/ldexp codec, for every legal exponent.
+# ---------------------------------------------------------------------------
+def test_exponent_bit_codec_matches_frexp_everywhere():
+    """The migration wire uses the shift-and-bias spelling so its jaxpr has
+    zero float ops; it must be VALUE-IDENTICAL to the frexp/ldexp codec of
+    the DP gradient wire over the full po2 range |e| <= 126."""
+    exps = jnp.arange(-126, 127, dtype=jnp.int8)
+    scales = exp_i8_to_scale(exps)                 # exact ldexp reference
+    assert (scale_to_exp_i8_bits(scales) == exps).all()
+    assert (scale_to_exp_i8(scales) == exps).all()
+    back = exp_i8_to_scale_bits(exps)
+    # bit-for-bit, not just value-equal
+    assert (jax.lax.bitcast_convert_type(back, jnp.uint32)
+            == jax.lax.bitcast_convert_type(scales, jnp.uint32)).all()
+
+
+# ---------------------------------------------------------------------------
+# Wire header round-trip.
+# ---------------------------------------------------------------------------
+def test_transfer_meta_roundtrip():
+    # the wire carries f32 bits, so start from an f32-exact temperature
+    meta = TransferMeta(rid=42, n_pages=3, page_size=4, bytes_per_page=1040,
+                        pos=11, max_new_tokens=9,
+                        temperature=float(np.float32(0.7)),
+                        prompt=(5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15),
+                        generated=(99,))
+    msg = meta.to_bytes()
+    got, off = TransferMeta.from_bytes(msg)
+    assert got == meta                      # incl. temperature: raw f32 bits
+    assert off == len(msg)                  # header consumes exactly itself
+    assert np.float32(got.temperature) == np.float32(0.7)
+
+    empty = TransferMeta(rid=0, n_pages=0, page_size=4, bytes_per_page=8,
+                         pos=2, max_new_tokens=1, temperature=0.0,
+                         prompt=(1, 2), generated=())
+    got2, _ = TransferMeta.from_bytes(empty.to_bytes())
+    assert got2 == empty
+
+    bad = msg.copy()
+    bad[0] ^= 0xFF                          # corrupt the magic
+    with pytest.raises(ValueError, match="magic"):
+        TransferMeta.from_bytes(bad)
+
+
+# ---------------------------------------------------------------------------
+# Codec pack -> unpack -> scatter bitwise identity on synthetic pools.
+# ---------------------------------------------------------------------------
+def _mk_pools(rng, n_pages=8, L=2, ps=4, KV=2, hd=6, fp8=True):
+    """Two-stack pools pytree with the paged_kv layout.  fp8 pools get RAW
+    random payload bytes — including 0x7F/0xFF NaN encodings — because the
+    wire must move bytes verbatim, and po2 scales; bf16 pools have no
+    scale plane."""
+    def one():
+        shape = (L, n_pages, ps, KV, hd)
+        if fp8:
+            raw = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+            data = jax.lax.bitcast_convert_type(raw, jnp.float8_e4m3fn)
+            scale = exp_i8_to_scale(jnp.asarray(
+                rng.integers(-30, 31, (L, n_pages, ps, KV, 1),
+                             dtype=np.int8)))
+            return {"data": data, "scale": scale}
+        data = jnp.asarray(rng.standard_normal(shape), jnp.bfloat16)
+        return {"data": data}
+    return {"attn": {"k": one(), "v": one()},
+            "alt": {"k": one(), "v": one()}}
+
+
+@pytest.mark.parametrize("fp8", [True, False], ids=["fp8", "bf16"])
+def test_codec_roundtrip_bitwise(fp8):
+    rng = np.random.default_rng(0 if fp8 else 1)
+    pools = _mk_pools(rng, fp8=fp8)
+    codec = KVTransferCodec(pools)
+    itemsize = 1 if fp8 else 2
+    per_page = 2 * 2 * (2 * 4 * 2) * (6 * itemsize + (1 if fp8 else 0))
+    assert codec.bytes_per_page == per_page
+    assert codec.bytes_for(3) == 4 * per_page       # bucket-padded
+    assert codec.bytes_for(0) == 0
+
+    meta = TransferMeta(rid=7, n_pages=3, page_size=4,
+                        bytes_per_page=codec.bytes_per_page, pos=12,
+                        max_new_tokens=4, temperature=0.0,
+                        prompt=tuple(range(12)), generated=(3,))
+    src_ids = [2, 5, 1]
+    msg = codec.pack(pools, src_ids, meta)
+    got, payload = codec.unpack(msg)
+    assert got == meta and len(payload) == codec.bytes_for(3)
+
+    # scatter into a zeroed clone at DIFFERENT page ids, gather back
+    blank = jax.tree.map(jnp.zeros_like, pools)
+    dst_ids = [6, 3, 7]
+    blank = codec.scatter(blank, payload, dst_ids)
+    for s, d in zip(src_ids, dst_ids):
+        a = np.asarray(codec._gather(pools, codec._pad_ids([s])))
+        b = np.asarray(codec._gather(blank, codec._pad_ids([d])))
+        assert (a == b).all(), f"page {s}->{d} not bit-identical"
+
+    # geometry fingerprint: a mismatched fleet refuses the message
+    other = KVTransferCodec(_mk_pools(rng, hd=4, fp8=fp8))
+    with pytest.raises(ValueError, match="geometry"):
+        other.unpack(msg)
+
+
+def test_fp8_nan_payload_survives_migration():
+    """Every e4m3 NaN encoding (0x7F/0xFF) must cross the wire verbatim —
+    a value-level copy would canonicalize them; a bitcast cannot."""
+    rng = np.random.default_rng(2)
+    pools = _mk_pools(rng, fp8=True)
+    raw = np.asarray(jax.lax.bitcast_convert_type(
+        pools["attn"]["k"]["data"], jnp.uint8))
+    assert ((raw == 0x7F) | (raw == 0xFF)).any()    # NaNs are in the deck
+    codec = KVTransferCodec(pools)
+    meta = TransferMeta(rid=0, n_pages=2, page_size=4,
+                        bytes_per_page=codec.bytes_per_page, pos=8,
+                        max_new_tokens=1, temperature=0.0,
+                        prompt=tuple(range(8)), generated=())
+    _, payload = codec.unpack(codec.pack(pools, [1, 2], meta))
+    blank = codec.scatter(jax.tree.map(jnp.zeros_like, pools), payload,
+                          [1, 2])
+    ids = codec._pad_ids([1, 2])
+    assert (np.asarray(codec._gather(pools, ids))
+            == np.asarray(codec._gather(blank, ids))).all()
+
+
+# ---------------------------------------------------------------------------
+# The structural zero-requantization proof.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fp8", [True, False], ids=["fp8", "bf16"])
+def test_codec_is_casting_free(fp8):
+    pools = _mk_pools(np.random.default_rng(3), fp8=fp8)
+    KVTransferCodec(pools).assert_casting_free(pools, n=3)
+
+
+def test_casting_free_rejects_a_quantizer():
+    """Negative control: a textbook quantize (amax -> scale -> divide ->
+    convert) must FAIL the checker — otherwise the assert proves nothing."""
+    def quantize(x):
+        s = jnp.max(jnp.abs(x)) / 448.0
+        return (x / s).astype(jnp.float8_e4m3fn)
+    j = jax.make_jaxpr(quantize)(jnp.ones((8,), jnp.float32))
+    with pytest.raises(AssertionError, match="casting-free"):
+        check_casting_free(j.jaxpr)
+
+    def dequantize(q, s):
+        return q.astype(jnp.float32) * s
+    j2 = jax.make_jaxpr(dequantize)(
+        jnp.ones((8,), jnp.float8_e4m3fn), jnp.float32(2.0))
+    with pytest.raises(AssertionError, match="casting-free"):
+        check_casting_free(j2.jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler park / adopt / release semantics (pure host).
+# ---------------------------------------------------------------------------
+def _admit(sched, alloc, n_prompt=4, max_new=2, now=0.0):
+    sched.submit(Request(prompt=list(range(n_prompt)), max_new_tokens=max_new))
+    st = sched.try_admit(alloc, now)
+    assert st is not None
+    return st
+
+
+def test_parked_requests_are_never_eviction_victims():
+    alloc = PageAllocator(n_pages=16, page_size=4)
+    sched = Scheduler(max_batch=3, token_budget=100)
+    a = _admit(sched, alloc)
+    b = _admit(sched, alloc)                # youngest
+    b.parked = True                         # in the handoff queue
+    victim = sched.evict_youngest(alloc)
+    assert victim is a                      # youngest LIVE, not the parked b
+    assert b.slot in sched.active and sched.active[b.slot].parked
+    b.parked = False
+    assert sched.evict_youngest(alloc) is b
+    assert sched.evict_youngest(alloc) is None   # nothing live remains
+
+
+def test_adopt_installs_into_free_slot_and_guards_full_batch():
+    alloc = PageAllocator(n_pages=16, page_size=4)
+    sched = Scheduler(max_batch=2, token_budget=100)
+    a = _admit(sched, alloc)
+    _admit(sched, alloc)
+    migrant = RequestState(req=Request(prompt=[1, 2, 3], max_new_tokens=2),
+                           slot=-1, pages=alloc.alloc(1), admit_seq=-1,
+                           admit_time=0.0, prefilled=True, prefill_pos=3,
+                           parked=True)
+    with pytest.raises(RuntimeError, match="free slot"):
+        sched.adopt(migrant)                # batch is full
+    sched.finish(a.slot, alloc, now=1.0)
+    sched.adopt(migrant)
+    assert migrant.slot in sched.active and not migrant.parked
+    assert migrant.admit_seq > a.admit_seq  # joins at the back of seniority
+    assert sched.n_adopted == 1
+
+
+def test_donor_release_goes_through_the_release_hook():
+    """release_parked must exit through the SAME funnel as finish/evict so a
+    prefix cache sees the decref (cached pages stay shareable)."""
+    seen = []
+    alloc = PageAllocator(n_pages=16, page_size=4)
+    sched = Scheduler(max_batch=2, token_budget=100,
+                      release_hook=lambda st, pages, a: (
+                          seen.append(list(pages)), a.free(pages)))
+    st = _admit(sched, alloc)
+    held = list(st.pages)
+    st.parked = True
+    sched.release(st, alloc)                # the receiver-ack path
+    assert seen == [held]
+    assert st.pages == [] and st.slot not in sched.active
+    assert alloc.live_pages == 0
+    # the freed slot is immediately adoptable
+    sched.adopt(RequestState(req=Request(prompt=[1], max_new_tokens=1),
+                             slot=-1, pages=[], admit_seq=-1, admit_time=0.0))
+    assert sched.n_active == 1
+
+
+# ---------------------------------------------------------------------------
+# Router guard: a saturated fleet that progresses ONLY via the drain must
+# not trip the deadlock detector (the satellite-1 regression).
+# ---------------------------------------------------------------------------
+class _ParkedEngine:
+    """Every tick returns False (at budget, no admissible head) but the
+    engine is NOT idle: `work` stands in for parked requests that only the
+    router's drain (migration) can retire."""
+    def __init__(self, work):
+        self.work = work
+        self.sched = self
+
+    def idle(self):
+        return self.work == 0
+
+    def tick(self, now, results):
+        return False
+
+    def stats(self):
+        return {}
+
+
+class _MigratingRouter:
+    """ReplicaRouter whose drain retires one unit of parked work per cycle
+    — the shape of DisaggRouter._drain without devices."""
+    def __new__(cls, engines):
+        from repro.serve.router import ReplicaRouter
+
+        class _R(ReplicaRouter):
+            def _drain(self, now, results):
+                for e in self.engines:
+                    if e.work:
+                        e.work -= 1
+                        return True
+                return False
+        return _R(engines)
+
+
+def test_saturated_fleet_progresses_via_drain():
+    # > 1000 units of drain-only work per engine: if drain progress did not
+    # reset the idle counter, the deadlock guard would fire long before the
+    # handoff queues empty
+    engines = [_ParkedEngine(work=1200), _ParkedEngine(work=1200)]
+    router = _MigratingRouter(engines)
+    router.run([], realtime=False)
+    assert all(e.work == 0 for e in engines)
+
+
+def test_genuinely_stuck_fleet_still_raises():
+    from repro.serve.router import ReplicaRouter
+    router = ReplicaRouter([_ParkedEngine(work=1)])   # base drain: no-op
+    with pytest.raises(RuntimeError, match="deadlock"):
+        router.run([], realtime=False)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: 1-prefill + 1-decode fleet == single-tier engine, bitwise.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_disagg_fleet_bitwise_identical_and_reshares_pages():
+    """Shared-prefix trace through (a) one mixed engine and (b) a
+    DisaggRouter fleet.  Greedy decode must be BITWISE identical — the
+    migration is a pure bitcast, so there is nothing to drift — every
+    request must migrate, the receiver must dedupe repeated prefixes
+    against pages it already adopted, migrated pages must be bit-equal on
+    both tiers, and neither tier may leak pages."""
+    from repro.configs import get_arch
+    from repro.core.recipes import get_recipe
+    from repro.models.lm import ParallelPlan, init_params
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.router import DisaggRouter
+
+    cfg = get_arch("qwen15_05b").reduced()
+    plan = ParallelPlan(mesh=make_mesh11(), dp_axes=("data",))
+    recipe = get_recipe("fp8_flow")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    prefix = list(rng.integers(1, cfg.vocab, 8))     # two full pages
+    prompts = [prefix + list(rng.integers(1, cfg.vocab, k))
+               for k in (3, 4, 2, 1, 5)]
+    kw = dict(max_batch=3, page_size=4, n_pages=32, max_pages_per_req=8,
+              token_budget=128, prefill_buckets=(16,), prefill_chunk=4,
+              fp8_kv=True, w8_weights=True, prefix_cache=True, seed=0)
+
+    def reqs():
+        return [Request(prompt=list(p), max_new_tokens=4) for p in prompts]
+
+    single = ServeEngine(cfg, recipe, plan, params, ServeConfig(**kw))
+    r1 = reqs()
+    res1 = single.run(r1, realtime=False)
+    toks1 = [res1[q.rid]["tokens"] for q in r1]
+
+    pe = ServeEngine(cfg, recipe, plan, params,
+                     ServeConfig(role="prefill", **kw))
+    de = ServeEngine(cfg, recipe, plan, params,
+                     ServeConfig(role="decode", **kw))
+    router = DisaggRouter([pe], [de])
+    r2 = reqs()
+    res2 = router.run(r2, realtime=False)
+    toks2 = [res2[q.rid]["tokens"] for q in r2]
+    assert toks1 == toks2
+
+    d = router.stats()["disagg"]
+    assert d["migrations"] == len(prompts)
+    # the shared prefix ships once; later migrations re-share it on the
+    # receiver (radix identity travels with the pages)
+    assert d["deduped_pages"] > 0
+    # migrated pages bit-equal donor vs receiver (payload + exponents),
+    # gathered one page at a time (bucket padding drags in scratch garbage)
+    compared = 0
+    for q in r2:
+        dp = pe.prefix_cache.match_pages(q.prompt)
+        rp = de.prefix_cache.match_pages(q.prompt)
+        for s, t in zip(dp, rp):
+            a = np.asarray(pe.codec._gather(pe.pools, pe.codec._pad_ids([s])))
+            b = np.asarray(de.codec._gather(de.pools, de.codec._pad_ids([t])))
+            assert (a == b).all()
+            compared += 1
+    assert compared > 0
+    # no leaks: both tiers idle, every live page is cache-held
+    for eng in (pe, de, single):
+        assert eng.sched.idle()
+        assert eng.alloc.live_pages == eng.prefix_cache.n_cached_pages
+        eng.prefix_cache.check_invariants(eng.alloc)
